@@ -1,0 +1,117 @@
+"""Paper Table II: external memory access saved by compression — plus the
+TPU-side analogues this framework actually deploys.
+
+Part A (paper-faithful): per-inference interlayer data reduction (MB/figure)
+for the five CNNs from the codec accounting, and time saved at the paper's
+DMA rate (the paper's Table II uses the DW-axi-dmac; we report at both that
+rate and v5e HBM bandwidth).
+
+Part B (TPU deployment): per-step bytes saved by the three integration
+points on a representative LM —
+  * ActCompress: saved-for-backward residual bytes,
+  * KVCompress: KV cache capacity + decode-read bytes,
+  * GradCompress: cross-pod wire bytes
+all analytic from shapes (the dry-run's §Roofline covers the compiled view).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import grad_comp
+from repro.data.synthetic import natural_images
+from repro.models import cnn
+from repro.train import step as train_step
+
+PAPER_TABLE2_MB = {  # paper: data reduction MB per inference image
+    "yolov3_backbone": 54.36, "resnet50": 33.10, "vgg16_bn": 26.44,
+    "mobilenet_v1": 18.11, "mobilenet_v2": 20.19,
+}
+DMA_BYTES_PER_S = 54.36e6 / 14.12e-3 * 0  # unused; derived per-net below
+V5E_HBM = 819e9
+
+
+def part_a(img_size=128, batch=1, verbose=True) -> dict:
+    imgs = jnp.asarray(natural_images(0, batch, img_size, img_size))
+    out = {}
+    for name in PAPER_TABLE2_MB:
+        init, apply = cnn.MODELS[name]
+        params = init(jax.random.PRNGKey(1))
+        stats = cnn.FusionStats()
+        apply(params, imgs, cnn.CompressionSchedule(n_layers=10), stats)
+        orig = sum(float(l["orig_bits"]) for l in stats.layers) / 8 / batch
+        compd = sum(float(l["comp_bits"]) for l in stats.layers) / 8 / batch
+        saved = orig - compd
+        # paper's Table II DMA rate: 54.36 MB in 14.12 ms => ~3.85 GB/s
+        dma = 54.36e6 / 14.12e-3
+        out[name] = {
+            "orig_mb": orig / 1e6, "comp_mb": compd / 1e6,
+            "saved_mb": saved / 1e6,
+            "saved_ms_dma": saved / dma * 1e3,
+            "saved_us_v5e_hbm": saved / V5E_HBM * 1e6,
+            "paper_saved_mb": PAPER_TABLE2_MB[name],
+        }
+        if verbose:
+            r = out[name]
+            print(f"{name:18s} saved {r['saved_mb']:7.2f} MB/img "
+                  f"({r['saved_ms_dma']:5.2f} ms at paper DMA; "
+                  f"{r['saved_us_v5e_hbm']:6.1f} us at v5e HBM) "
+                  f"[paper: {r['paper_saved_mb']:.2f} MB at 224px VOC]")
+    return out
+
+
+def part_b(arch="yi_6b", seq=4096, batch=16, keep=4, verbose=True) -> dict:
+    cfg = get_config(arch)
+    d, L = cfg.d_model, cfg.n_layers
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    toks = seq * batch
+    # ActCompress: one residual (B,S,D) bf16 per layer saved for backward
+    resid_raw = L * toks * d * 2
+    resid_comp = L * toks * d * (keep * keep + 8) / 64  # int8 corner + header
+    # KVCompress: cache bytes (k+v) bf16 vs int8 DCT store
+    kv_raw = L * toks * hkv * hd * 2 * 2
+    kv_comp = L * toks * hkv * hd * 2 * (keep * keep + 4) / 64
+    # GradCompress: wire bytes of one all-reduce of all grads
+    api_params = None
+    params = jax.eval_shape(
+        lambda: __import__("repro.models.api", fromlist=["build"]).build(arch).init(jax.random.PRNGKey(0))
+    )
+    gw = grad_comp.wire_bytes(params, grad_comp.GradCompressConfig(keep=5))
+    out = {
+        "arch": arch,
+        "act_raw_gb": resid_raw / 1e9, "act_comp_gb": resid_comp / 1e9,
+        "act_ratio": resid_comp / resid_raw,
+        "kv_raw_gb": kv_raw / 1e9, "kv_comp_gb": kv_comp / 1e9,
+        "kv_ratio": kv_comp / kv_raw,
+        "grad_raw_gb": gw["raw_bytes"] / 1e9,
+        "grad_comp_gb": gw["compressed_bytes"] / 1e9,
+        "grad_ratio": gw["ratio"],
+    }
+    if verbose:
+        print(f"{arch} @ seq {seq} x batch {batch}, keep={keep}:")
+        print(f"  ActCompress residuals {out['act_raw_gb']:.1f} -> "
+              f"{out['act_comp_gb']:.2f} GB ({1/out['act_ratio']:.1f}x)")
+        print(f"  KVCompress cache      {out['kv_raw_gb']:.1f} -> "
+              f"{out['kv_comp_gb']:.2f} GB ({1/out['kv_ratio']:.1f}x)")
+        print(f"  GradCompress wire     {out['grad_raw_gb']:.1f} -> "
+              f"{out['grad_comp_gb']:.2f} GB ({1/out['grad_ratio']:.1f}x)")
+    return out
+
+
+def main(quick: bool = False):
+    res = {"paper_table2": part_a(img_size=64 if quick else 128),
+           "tpu_integration": part_b()}
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "bandwidth_saved.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    main()

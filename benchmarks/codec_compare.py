@@ -1,0 +1,81 @@
+"""Paper Table IV/V codec comparison on IDENTICAL activations.
+
+Codecs:
+  * paper (this work): 8x8 DCT + 2-step quant + bitmap index (+8b values)
+  * bitmap on raw activations (EIE-style [25])
+  * run-length on raw activations (Eyeriss JSSC'17 [23])
+  * CSR (STICKER JSSC'20 [28])
+  * zero-order entropy bound (ideal Huffman, the paper's rejected option)
+
+Run on (a) ReLU activations (sparse — the favourable case for the raw-domain
+codecs) and (b) leaky-ReLU activations (dense — the paper's motivating case
+where raw-domain sparse codecs fail and only the DCT path compresses).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor, encode
+from repro.data.synthetic import natural_images
+from repro.models import cnn
+
+
+def activations(dense: bool, size=64, batch=2, seed=0):
+    """First-fusion-layer activations of a random CNN on 1/f images."""
+    imgs = jnp.asarray(natural_images(seed, batch, size, size))
+    params = cnn.tiny_cnn_init(jax.random.PRNGKey(2), cin=3, width=16)
+    pre = cnn.bn(params["b1"], cnn.conv(params["c1"], imgs))
+    act = cnn.leaky_relu(pre) if dense else cnn.relu(pre)
+    return np.asarray(jnp.transpose(act, (0, 3, 1, 2)))  # (N, C, H, W)
+
+
+def run_case(act: np.ndarray, level: int = 1) -> dict:
+    dense_b = encode.dense_bits(act, 16)
+    policy = compressor.CompressionPolicy(level=level)
+    comp = compressor.compress(jnp.asarray(act), policy)
+    paper_b = float(encode.paper_codec_bits(np.asarray(comp.values * comp.index), 8))
+    # reconstruction error of the lossy paper codec
+    rec = compressor.decompress(comp)
+    rel_err = float(jnp.linalg.norm(rec - act) / (jnp.linalg.norm(act) + 1e-9))
+    out = {
+        "dense_16b": 1.0,
+        "paper_dct": paper_b / dense_b,
+        "bitmap_raw": encode.bitmap_codec_bits(act, 16) / dense_b,
+        "rle_raw": encode.rle_codec_bits(act, 16) / dense_b,
+        "csr_raw": encode.csr_codec_bits(act, 16) / dense_b,
+        "entropy_bound_raw": encode.entropy_bound_bits(
+            np.round(act * 128).astype(np.int32)) / dense_b,
+        "paper_rel_err": rel_err,
+        "zero_frac": float((act == 0).mean()),
+    }
+    return out
+
+
+def main(quick: bool = False):
+    size = 32 if quick else 64
+    results = {}
+    for case, dense in (("relu_sparse", False), ("leaky_dense", True)):
+        res = run_case(activations(dense, size=size))
+        results[case] = res
+        print(f"-- {case} (zeros {res['zero_frac']*100:.0f}%)")
+        for k in ("paper_dct", "bitmap_raw", "rle_raw", "csr_raw", "entropy_bound_raw"):
+            print(f"   {k:18s} {res[k]*100:6.1f}% of dense")
+        print(f"   paper codec relative reconstruction err {res['paper_rel_err']:.3f}")
+    # paper's argument: on DENSE activations the raw codecs exceed dense
+    # storage (index overhead, no zeros) while the DCT path still compresses
+    assert results["leaky_dense"]["paper_dct"] < 0.8
+    assert results["leaky_dense"]["bitmap_raw"] > 0.95
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "codec_compare.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

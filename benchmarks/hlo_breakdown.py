@@ -1,0 +1,47 @@
+"""Per-op HBM/bytes breakdown of one dry-run cell — the §Perf 'profiler'.
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch yi_6b \
+        --shape decode_32k [--multi-pod] [--variant baseline] [--top 20]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as model_api
+from repro.roofline import hlo as H
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    api = model_api.build(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, fargs, in_sh, out_sh = build_cell(api, mesh, args.shape, args.variant)
+    with jax.set_mesh(mesh):
+        kw = {"in_shardings": in_sh}
+        if out_sh is not None:
+            kw["out_shardings"] = out_sh
+        compiled = jax.jit(fn, **kw).lower(*fargs).compile()
+    txt = compiled.as_text()
+    st = H.analyze(txt)
+    print(f"total: flops {st.flops:.3e}  bytes {st.bytes:.3e}  wire {st.wire:.3e}")
+    print(f"\ntop-{args.top} byte movers (bytes x loop multipliers):")
+    for b, comp, line in H.breakdown(txt, args.top):
+        print(f"  {b/1e9:10.2f} GB  [{comp}]")
+        print(f"      {line[:160]}")
+
+
+if __name__ == "__main__":
+    main()

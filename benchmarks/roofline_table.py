@@ -1,0 +1,103 @@
+"""Aggregate dry-run artifacts into the §Dry-run / §Roofline markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--variant baseline]
+
+Reads benchmarks/artifacts/dryrun/*.json, emits:
+  * artifacts/roofline_<variant>.md — the full per-cell table
+  * stdout — the table + hillclimb-candidate ranking
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load(variant: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "dryrun", f"*__{variant}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    return f"{x*1e3:8.2f}ms"
+
+
+def table(recs: list[dict], mesh: str | None = None) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | "
+        "bound/step | frac | useful | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            if mesh is None or mesh in r["cell"]:
+                arch, shape, m = r["cell"].split("/")[:3]
+                lines.append(
+                    f"| {arch} | {shape} | {m} | — | — | — | skipped | — | — | — | — |")
+            continue
+        if r["status"] != "ok" or (mesh and r["mesh"] != mesh):
+            continue
+        comp, memy, coll = r["compute_s"], r["memory_s"], r["collective_s"]
+        bound = max(comp, memy, coll)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(comp)} | "
+            f"{fmt_s(memy)} | {fmt_s(coll)} | {r['dominant']} | {fmt_s(bound)} | "
+            f"{r['roofline_fraction']:.2f} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['mfu_bound']*100:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def candidates(recs: list[dict]) -> str:
+    """Hillclimb candidate ranking: how far the dominant term sits above the
+    compute term (the achievable speedup if the bottleneck were removed)."""
+    rows = []
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        comp = max(r["compute_s"], 1e-9)
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((bound / comp, r))
+    rows.sort(reverse=True, key=lambda t: t[0])
+    out = ["\nhillclimb candidates (bound/compute — headroom if bottleneck removed):"]
+    for gap, r in rows[:10]:
+        out.append(
+            f"  {gap:9.1f}x  {r['arch']:24s} {r['shape']:12s} dom={r['dominant']:10s} "
+            f"coll_frac={r['collective_s']/max(r['memory_s']+r['collective_s']+r['compute_s'],1e-9):.2f}"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    recs = load(args.variant)
+    if not recs:
+        raise SystemExit(f"no artifacts for variant {args.variant}")
+    md = (
+        f"## Roofline — variant `{args.variant}`\n\n### single-pod 16x16\n\n"
+        + table(recs, "16x16")
+        + "\n\n### multi-pod 2x16x16\n\n"
+        + table(recs, "2x16x16")
+    )
+    out = os.path.join(ART, f"roofline_{args.variant}.md")
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    print(md)
+    print(candidates(recs))
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    print(f"\n{n_ok} ok, {n_skip} skipped -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  compression_table  Table III + Fig. 16 (layer-by-layer ratios, 5 CNNs)
+  codec_compare      Table IV/V (DCT codec vs bitmap/RLE/CSR/entropy)
+  accuracy_loss      §VI-B (<1% accuracy loss, 4 quantization levels)
+  bandwidth_saved    Table II (memory access saved; + TPU integration points)
+
+The roofline/dry-run tables (§Dry-run, §Roofline) are produced by
+`python -m repro.launch.dryrun`, not here — they need the 512-device flag.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller inputs / fewer steps (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+
+    from benchmarks import accuracy_loss, bandwidth_saved, codec_compare, \
+        compression_table, kv_kernel_analysis
+
+    suite = {
+        "compression_table": compression_table.main,
+        "codec_compare": codec_compare.main,
+        "accuracy_loss": accuracy_loss.main,
+        "bandwidth_saved": bandwidth_saved.main,
+        "kv_kernel_analysis": kv_kernel_analysis.main,
+    }
+    if args.only:
+        suite = {args.only: suite[args.only]}
+
+    failed = []
+    for name, fn in suite.items():
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"--- {name} ok in {time.time()-t0:.1f}s")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"--- {name} FAILED")
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

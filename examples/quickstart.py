@@ -1,0 +1,51 @@
+"""Quickstart: the paper's interlayer feature-map compression in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the full paper pipeline on a single feature map, then shows the three
+TPU deployment hooks (ActCompress / KVCompress / GradCompress) in miniature.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor
+from repro.core.activation import compressed_checkpoint
+from repro.data.synthetic import natural_images
+
+# --- 1. the paper pipeline on one "interlayer feature map" ----------------
+fmap = jnp.asarray(natural_images(seed=0, batch=1, h=64, w=64, c=1))[0, :, :, 0]
+
+for level in range(4):  # the paper's 2-bit quantization-level register
+    policy = compressor.CompressionPolicy(level=level)
+    comp = compressor.compress(fmap, policy)
+    ratio = float(compressor.compression_ratio(comp))
+    rec = compressor.decompress(comp)
+    err = float(jnp.linalg.norm(rec - fmap) / jnp.linalg.norm(fmap))
+    print(f"level {level}: stored at {ratio*100:5.1f}% of 16-bit dense, "
+          f"reconstruction error {err:.4f}")
+
+# --- 2. the TPU runtime path: structured frequency truncation --------------
+comp_t = compressor.compress_truncated(fmap, keep=4)
+print(f"\ntruncated path: {comp_t.nbytes_per_element():.3f} B/elem "
+      f"(vs 2 B bf16 = {2/comp_t.nbytes_per_element():.1f}x), "
+      f"err {float(jnp.linalg.norm(compressor.decompress_truncated(comp_t) - fmap) / jnp.linalg.norm(fmap)):.4f}")
+
+# --- 3. ActCompress: residuals saved for backward in compressed form ------
+w = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.05
+
+
+def layer(p, x):
+    return x + jnp.tanh(x @ p)
+
+
+wrapped = compressed_checkpoint(layer, keep=4)
+x = jnp.asarray(natural_images(1, 8, 8, 64, c=1))[..., 0].reshape(8, 8, 64)
+g_comp = jax.grad(lambda p: wrapped(p, x).sum())(w)
+g_exact = jax.grad(lambda p: layer(p, x).sum())(w)
+cos = float((g_comp * g_exact).sum() /
+            (jnp.linalg.norm(g_comp) * jnp.linalg.norm(g_exact)))
+print(f"\nActCompress gradient vs exact: cosine {cos:.4f} "
+      f"(residual stored at {(4*4+8)/64/2*100:.0f}% of bf16)")
+
+print("\nquickstart OK")

@@ -1,0 +1,32 @@
+"""End-to-end driver: train a ~10M-parameter LM (CPU-sized; the identical driver scales to any config) for a few hundred steps
+with the full production stack — sharded state, microbatched step,
+ActCompress remat, checkpointing, auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is a thin veneer over the real launcher (repro.launch.train); every
+flag it passes works the same on a TPU fleet.
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_launch
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    args = ap.parse_args()
+    losses = train_launch.main([
+        "--arch", args.arch,
+        "--reduced",                 # ~100M-class on CPU
+        "--steps", str(args.steps),
+        "--seq", "256",
+        "--batch", "16",
+        "--microbatches", "2",
+        "--remat", "compressed",     # the paper's technique on the residuals
+        "--save-every", "100",
+        "--ckpt-dir", "/tmp/repro_example_ckpt",
+    ])
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print("train_lm example OK")

@@ -1,0 +1,197 @@
+"""Architecture config system: one dataclass, ten public-literature configs.
+
+Every assigned architecture is a `src/repro/configs/<id>.py` exporting CONFIG;
+`registry()` resolves `--arch <id>`.  `reduced()` scales any config down to a
+CPU-smoke-test size of the same family (same code paths, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "deepseek_v2_236b",
+    "moonshot_v1_16b_a3b",
+    "nemotron_4_340b",
+    "yi_6b",
+    "qwen2_0_5b",
+    "command_r_plus_104b",
+    "llava_next_mistral_7b",
+    "whisper_base",
+    "zamba2_2_7b",
+    "rwkv6_1_6b",
+]
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 => d_model // n_heads
+    # attention
+    attn_type: str = "gqa"            # gqa | mla | none
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # MLP
+    mlp_type: str = "gated_silu"      # gated_silu | squared_relu | gelu
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0            # leading dense layers before MoE layers
+    moe_capacity_factor: float = 2.0  # expert queue = group*topk/E * cf
+    moe_dropless: bool = False        # capacity = group size (no drops)
+    moe_group_size: int = 1024        # dispatch group (bounds the one-hot)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    attn_every: int = 0               # hybrid: shared attn block every N blocks
+    # enc-dec (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 0          # fixed encoder context (audio frames)
+    # modality frontend stub
+    frontend: str = "none"            # none | vision_stub | audio_stub
+    frontend_tokens: int = 0          # precomputed embedding tokens prepended
+    # misc
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    supports_long_context: bool = False  # sub-quadratic sequence mixing
+    max_seq_len: int = 0              # architectural cap (0 = unbounded)
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ----- shape applicability (DESIGN.md §4) ---------------------------
+    def shape_supported(self, shape_name: str) -> tuple[bool, str]:
+        seq, _, kind = SHAPES[shape_name]
+        if shape_name == "long_500k" and not self.supports_long_context:
+            return False, "full-attention arch: 512k dense decode is quadratic-cost (skip per assignment)"
+        if kind == "decode" and self.max_seq_len and seq > self.max_seq_len:
+            # whisper: a 32k-token KV decode is outside the 448-token decoder
+            # envelope. (prefill/train shapes are reinterpreted instead:
+            # enc 1500 frames + dec <= cap, see ModelAPI.shape_plan.)
+            return False, f"architectural context cap {self.max_seq_len} < {seq}"
+        return True, ""
+
+    # ----- smoke-test reduction -----------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Same family/code paths, CPU-sized."""
+        r = {
+            "name": self.name + "_reduced",
+            "n_layers": min(self.n_layers, 4 if self.attn_every == 0 else 2 * max(self.attn_every, 1)),
+            "d_model": 64,
+            "n_heads": 4,
+            "n_kv_heads": min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            "head_dim": 16,
+            "d_ff": 128,
+            "vocab_size": 256,
+            "encoder_seq_len": min(self.encoder_seq_len, 32) if self.encoder_seq_len else 0,
+            "frontend_tokens": min(self.frontend_tokens, 16) if self.frontend_tokens else 0,
+            "max_seq_len": 0,
+        }
+        if self.n_experts:
+            r.update(n_experts=8, top_k=2, moe_d_ff=32,
+                     n_shared_experts=min(self.n_shared_experts, 1),
+                     first_k_dense=min(self.first_k_dense, 1))
+        if self.attn_type == "mla":
+            r.update(kv_lora_rank=32, q_lora_rank=32,
+                     qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+        if self.ssm_state:
+            r.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+        if self.attn_every:
+            r.update(attn_every=2)
+        if self.n_encoder_layers:
+            r.update(n_encoder_layers=2)
+        return replace(self, **r)
+
+    # ----- parameter count (for roofline MODEL_FLOPS) --------------------
+    def param_counts(self) -> dict[str, float]:
+        """Analytic total and active parameter counts (embedding included)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer_attn = 0.0
+        if self.attn_type == "gqa":
+            per_layer_attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        elif self.attn_type == "mla":
+            r, qr = self.kv_lora_rank, self.q_lora_rank
+            nope, rope, vh = self.qk_nope_head_dim, self.qk_rope_head_dim, self.v_head_dim
+            per_layer_attn = d * (r + rope) + r * self.n_heads * (nope + vh) + self.n_heads * vh * d
+            per_layer_attn += (d * qr + qr * self.n_heads * (nope + rope)) if qr else d * self.n_heads * (nope + rope)
+        dense_mlp = d * self.d_ff * (3 if self.mlp_type == "gated_silu" else 2)
+        total = embed
+        active = embed
+        if self.ssm_state and self.attn_every == 0:
+            pass  # pure ssm handled by family below
+        if self.family in ("dense", "vlm", "audio"):
+            total += L * (per_layer_attn + dense_mlp)
+            active = total
+            if self.is_encoder_decoder:
+                # encoder layers + cross attention in decoder
+                total += self.n_encoder_layers * (per_layer_attn + dense_mlp)
+                total += L * per_layer_attn  # cross-attn
+                active = total
+        elif self.family == "moe":
+            moe_mlp = 3 * d * self.moe_d_ff
+            shared = 3 * d * self.moe_d_ff * self.n_shared_experts
+            router = d * self.n_experts
+            n_moe = L - self.first_k_dense
+            total += L * per_layer_attn + self.first_k_dense * dense_mlp
+            total += n_moe * (self.n_experts * moe_mlp + shared + router)
+            active = embed + L * per_layer_attn + self.first_k_dense * dense_mlp
+            active += n_moe * (self.top_k * moe_mlp + shared + router)
+        elif self.family == "hybrid":
+            d_inner = self.ssm_expand * d
+            ssm_block = d * d_inner * 2 + d_inner * self.ssm_state * 2 + d_inner * d  # in/gate, B/C, out
+            n_attn = L // max(self.attn_every, 1)
+            total += L * ssm_block + (per_layer_attn + dense_mlp)  # shared attn counted once
+            active = embed + L * ssm_block + n_attn * (per_layer_attn + dense_mlp)
+        elif self.family == "ssm":
+            # rwkv6: time-mix (r,k,v,g,o ~ 5 d^2) + channel-mix (2 d*dff)
+            per = 5 * d * d + 2 * d * self.d_ff
+            total += L * per
+            active = total
+        return {"total": float(total), "active": float(active)}
+
+
+def registry() -> dict[str, ArchConfig]:
+    out = {}
+    for arch_id in ARCH_IDS:
+        mod = importlib.import_module(f"repro.configs.{arch_id}")
+        out[arch_id] = mod.CONFIG
+    return out
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return registry()[arch_id.replace("-", "_")]

@@ -1,0 +1,18 @@
+"""Command R+ 104B (dense GQA, no bias) [hf:CohereForAI/c4ai-command-r-plus]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command_r_plus_104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    attn_type="gqa",
+    mlp_type="gated_silu",
+    rope_theta=75e6,
+    source="hf:CohereForAI/c4ai-command-r-plus",
+)

@@ -1,0 +1,28 @@
+"""DeepSeek-V2 236B (MoE, MLA) [arXiv:2405.04434; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek_v2_236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: kv heads == heads, latent-cached
+    head_dim=128,
+    d_ff=12288,              # dense layers' FFN (first_k_dense)
+    vocab_size=102400,
+    attn_type="mla",
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    mlp_type="gated_silu",
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    first_k_dense=1,
+    rope_theta=1e4,
+    source="arXiv:2405.04434; hf:deepseek-ai/DeepSeek-V2",
+)

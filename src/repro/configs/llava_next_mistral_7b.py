@@ -1,0 +1,25 @@
+"""LLaVA-NeXT (Mistral-7B backbone, anyres vision stub) [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+The modality frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (anyres tiling yields up to 2880 patch tokens),
+prepended to the text sequence.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava_next_mistral_7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    attn_type="gqa",
+    mlp_type="gated_silu",
+    frontend="vision_stub",
+    frontend_tokens=2880,
+    rope_theta=1e6,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,23 @@
+"""Moonlight-16B-A3B (MoE) [hf:moonshotai/Moonlight-16B-A3B]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot_v1_16b_a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=11264,              # dense first layer FFN
+    vocab_size=163840,
+    attn_type="gqa",
+    mlp_type="gated_silu",
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    first_k_dense=1,
+    rope_theta=5e4,
+    source="hf:moonshotai/Moonlight-16B-A3B",
+)

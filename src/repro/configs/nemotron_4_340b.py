@@ -1,0 +1,18 @@
+"""Nemotron-4 340B (dense, squared-ReLU) [arXiv:2402.16819]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron_4_340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    attn_type="gqa",
+    mlp_type="squared_relu",
+    rope_theta=1e4,
+    source="arXiv:2402.16819",
+)

@@ -1,0 +1,19 @@
+"""RWKV-6 Finch 1.6B (attention-free, data-dependent decay) [arXiv:2404.05892]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6_1_6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,              # wkv heads = d_model / 64
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    attn_type="none",
+    mlp_type="gelu",
+    ssm_chunk=16,  # intra-chunk decay factoring bound: exp(|LOG_W_MIN|*chunk) must fit f32
+    supports_long_context=True,
+    source="arXiv:2404.05892",
+)

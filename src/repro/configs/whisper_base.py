@@ -1,0 +1,28 @@
+"""Whisper-base (enc-dec, conv frontend stub) [arXiv:2212.04356].
+
+Encoder consumes precomputed frame embeddings (1500 frames = 30 s audio,
+conv frontend stubbed per assignment).  Decoder context cap is 448 tokens
+(architectural), so decode_32k / long_500k shapes are skipped (DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper_base",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    attn_type="gqa",
+    mlp_type="gelu",
+    norm="layernorm",
+    is_encoder_decoder=True,
+    n_encoder_layers=6,
+    encoder_seq_len=1500,
+    frontend="audio_stub",
+    max_seq_len=448,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,23 @@
+"""Zamba2-2.7B (Mamba2 blocks + shared attention) [arXiv:2411.15242; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2_2_7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    attn_type="gqa",
+    mlp_type="gelu",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    attn_every=6,
+    supports_long_context=True,
+    source="arXiv:2411.15242; hf:Zyphra/Zamba2-2.7B",
+)

@@ -1,0 +1,26 @@
+"""Paper core: interlayer feature-map compression (DCT + quant + sparse code)."""
+from repro.core.compressor import (
+    Compressed,
+    CompressionPolicy,
+    TruncatedCompressed,
+    compress,
+    compress_truncated,
+    compression_ratio,
+    decompress,
+    decompress_truncated,
+    roundtrip,
+    roundtrip_truncated,
+)
+
+__all__ = [
+    "Compressed",
+    "CompressionPolicy",
+    "TruncatedCompressed",
+    "compress",
+    "compress_truncated",
+    "compression_ratio",
+    "decompress",
+    "decompress_truncated",
+    "roundtrip",
+    "roundtrip_truncated",
+]

@@ -1,0 +1,151 @@
+"""8x8 block DCT-II / DCT-III (IDCT) — the paper's frequency transform (Eq. 2-6).
+
+The paper uses the orthonormal DCT-II variant (first row scaled by 1/sqrt(2),
+whole matrix scaled by sqrt(2/N)) so that C @ C.T == I and the 2-D transform is
+Z = C X C^T (Eq. 5), X = C^T Z C (Eq. 6).
+
+Also implements the Gong et al. [40] fast decomposition the paper's DCT module
+uses in hardware (Eq. 12-18): the 8x8 transform splits into even/odd 4x4 halves
+via butterflies, halving multiplies.  On TPU the plain 8x8 constant matmul is
+already MXU-friendly, so the fast path exists as a *validated reference* of the
+paper's hardware algorithm, not the default compute path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 8
+
+
+@functools.lru_cache(maxsize=None)
+def _dct_matrix_np(n: int = BLOCK) -> np.ndarray:
+    """Orthonormal DCT-II matrix C with C[k, i] = s_k cos(pi (i + 1/2) k / n)."""
+    k = np.arange(n)[:, None].astype(np.float64)
+    i = np.arange(n)[None, :].astype(np.float64)
+    c = np.cos(np.pi * (i + 0.5) * k / n)
+    c *= np.sqrt(2.0 / n)
+    c[0] *= 1.0 / np.sqrt(2.0)
+    return c
+
+
+def dct_matrix(n: int = BLOCK, dtype=jnp.float32) -> jax.Array:
+    return jnp.asarray(_dct_matrix_np(n), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense blocked 2-D DCT.  Input layout: (..., H, W) with H, W multiples of 8.
+# ---------------------------------------------------------------------------
+
+def _blockize(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """(..., H, W) -> (..., H/b, W/b, b, b)."""
+    *lead, h, w = x.shape
+    x = x.reshape(*lead, h // block, block, w // block, block)
+    return jnp.moveaxis(x, -3, -2)
+
+
+def _unblockize(x: jax.Array) -> jax.Array:
+    """(..., H/b, W/b, b, b) -> (..., H, W)."""
+    *lead, nh, nw, b, b2 = x.shape
+    x = jnp.moveaxis(x, -2, -3)
+    return x.reshape(*lead, nh * b, nw * b2)
+
+
+def dct2_blocks(blocks: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """2-D DCT-II of (..., 8, 8) blocks: Z = C X C^T (Eq. 5)."""
+    c = dct_matrix(blocks.shape[-1], dtype)
+    x = blocks.astype(dtype)
+    return jnp.einsum("ki,...ij,lj->...kl", c, x, c)
+
+
+def idct2_blocks(coefs: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """2-D DCT-III of (..., 8, 8) blocks: X = C^T Z C (Eq. 6)."""
+    c = dct_matrix(coefs.shape[-1], dtype)
+    z = coefs.astype(dtype)
+    return jnp.einsum("ik,...ij,jl->...kl", c, z, c)
+
+
+def dct2(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Blocked 2-D DCT over the trailing two axes (H, W multiples of `block`)."""
+    return _unblockize(dct2_blocks(_blockize(x, block)))
+
+
+def idct2(z: jax.Array, block: int = BLOCK) -> jax.Array:
+    return _unblockize(idct2_blocks(_blockize(z, block)))
+
+
+def pad_to_block(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, tuple[int, int]]:
+    """Edge-pad trailing two dims up to a multiple of `block`.
+
+    Edge padding (replicate border) avoids the artificial high-frequency step a
+    zero-pad would inject at the boundary, matching JPEG practice.
+    """
+    *_, h, w = x.shape
+    ph = (-h) % block
+    pw = (-w) % block
+    if ph or pw:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+        x = jnp.pad(x, pad, mode="edge")
+    return x, (ph, pw)
+
+
+def crop_from_block(x: jax.Array, orig_hw: tuple[int, int]) -> jax.Array:
+    h, w = orig_hw
+    return x[..., :h, :w]
+
+
+# ---------------------------------------------------------------------------
+# Gong et al. [40] fast 8x8 DCT — the paper's hardware algorithm (Eq. 12-18).
+#
+# C = Q^T [[Ce, Ce P], [Co, -Co P]]  up to row permutation Q (Eq. 13/14): the
+# even DCT rows act on x_top + reverse(x_bottom), the odd rows on
+# x_top - reverse(x_bottom).  One 8-pt transform = two 4x4 matmuls.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _gong_matrices() -> tuple[np.ndarray, np.ndarray]:
+    c = _dct_matrix_np(8)
+    ce = c[0::2, :4]  # even rows are symmetric: c[2k, i] == c[2k, 7-i]
+    co = c[1::2, :4]  # odd rows antisymmetric: c[2k+1, i] == -c[2k+1, 7-i]
+    return ce, co
+
+
+def dct1d_8_fast(x: jax.Array) -> jax.Array:
+    """8-point DCT-II along the last axis via the even/odd 4x4 decomposition."""
+    ce, co = _gong_matrices()
+    ce = jnp.asarray(ce, x.dtype)
+    co = jnp.asarray(co, x.dtype)
+    top, bot = x[..., :4], x[..., 4:]
+    bot_r = bot[..., ::-1]
+    even = (top + bot_r) @ ce.T  # X_0, X_2, X_4, X_6
+    odd = (top - bot_r) @ co.T   # X_1, X_3, X_5, X_7
+    out = jnp.stack([even, odd], axis=-1)  # interleave even/odd -> natural order
+    return out.reshape(*x.shape[:-1], 8)
+
+
+def dct2_blocks_fast(blocks: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """2-D DCT of (..., 8, 8) blocks using the Gong fast 1-D transform twice."""
+    x = blocks.astype(dtype)
+    y = dct1d_8_fast(x)                      # transform rows' last axis (W)
+    y = jnp.swapaxes(y, -1, -2)
+    y = dct1d_8_fast(y)                      # transform the H axis
+    return jnp.swapaxes(y, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# Tiling helper for non-image tensors (LM activations): fold trailing dims to
+# a 2-D (rows, cols) plane, DCT it, and restore.  rows = flattened leading of
+# the last axis in groups of 8; see DESIGN.md §6(3).
+# ---------------------------------------------------------------------------
+
+def as_plane(x: jax.Array) -> tuple[jax.Array, tuple]:
+    """Reshape any >=2-D tensor to (-1, last_dim) for 8x8 tiling."""
+    shape = x.shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def from_plane(x: jax.Array, shape: tuple) -> jax.Array:
+    return x.reshape(shape)

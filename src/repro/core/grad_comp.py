@@ -1,0 +1,193 @@
+"""GradCompress: DCT-truncated, error-feedback gradient exchange (DESIGN.md §3.3).
+
+Cross-pod data parallelism reduces gradients over the slowest links in the
+system. The paper's idea — transform at the memory/transport boundary so the
+expensive level only ever sees frequency-truncated int8 — applied to that
+all-reduce:
+
+  1. error feedback:  g_fb = g + residual          (carried per-leaf state)
+  2. compress:        per-leaf (rows, cols) plane -> 8x8 DCT tiles ->
+                      per-tile TOP-K |coefficient| -> int8 values + u8 indices
+  3. exchange:        all_gather the int8 payload over the `pod` axis
+                      (wire ~ (2k^2+4)/256 of f32: k=5 -> ~4.7x less)
+  4. decompress+mean: each pod reconstructs every pod's contribution, averages
+  5. residual update: residual' = g_fb - decompress(compress(g_fb))
+
+Why top-k support and not the paper's fixed low-frequency corner: error
+feedback REQUIRES a contractive compressor (||x - C(x)|| <= (1-k/64)||x||,
+which magnitude top-k satisfies). A FIXED subspace projection is idempotent:
+the orthogonal component re-enters the residual unchanged every step and the
+residual norm grows LINEARLY (measured: 59 -> 2368 over 40 steps) while the
+reconstructed mean never improves — the paper's corner truncation is correct
+for activations (consumed once) but wrong for accumulated gradient state.
+Both modes are implemented; tests/test_grad_comp.py pins the divergence of
+`corner` and the convergence of `topk` (EXPERIMENTS.md §Perf, refuted-
+hypothesis log).
+
+The exchange runs inside a partial-manual shard_map over `pod` (data/model
+axes stay in GSPMD auto mode), so the collective schedule in the lowered HLO
+shows int8 all-gathers on the pod axis instead of f32 all-reduces — the
+claim the roofline's collective term verifies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct as dct_lib
+
+BLOCK = 8
+MIN_COMPRESS_SIZE = 64 * 64  # leaves smaller than this go raw (headers dominate)
+
+
+def _compressible(leaf: jax.Array) -> bool:
+    if leaf.ndim < 2 or leaf.size < MIN_COMPRESS_SIZE:
+        return False
+    rows = int(np.prod(leaf.shape[:-1]))
+    return rows % BLOCK == 0 and leaf.shape[-1] % BLOCK == 0
+
+
+def _dct_k(keep: int) -> jax.Array:
+    return jnp.asarray(dct_lib._dct_matrix_np(BLOCK)[:keep], jnp.float32)
+
+
+def _dct8_full() -> jax.Array:
+    return jnp.asarray(dct_lib._dct_matrix_np(BLOCK), jnp.float32)
+
+
+def _tiles(g: jax.Array) -> jax.Array:
+    """(rows, cols) plane -> full-DCT tiles (nr, nc, 64) f32."""
+    plane = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    r, c = plane.shape
+    cm = _dct8_full()
+    t = plane.reshape(r // BLOCK, BLOCK, c // BLOCK, BLOCK)
+    t = jnp.swapaxes(t, 1, 2)
+    z = jnp.einsum("ua,ijab,vb->ijuv", cm, t, cm)
+    return z.reshape(z.shape[0], z.shape[1], BLOCK * BLOCK)
+
+
+def _untile(z64: jax.Array, shape) -> jax.Array:
+    nr, nc, _ = z64.shape
+    cm = _dct8_full()
+    z = z64.reshape(nr, nc, BLOCK, BLOCK)
+    t = jnp.einsum("ua,ijuv,vb->ijab", cm, z, cm)
+    plane = jnp.swapaxes(t, 1, 2).reshape(nr * BLOCK, nc * BLOCK)
+    return plane.reshape(shape)
+
+
+def compress_leaf(g: jax.Array, keep: int, mode: str = "topk"):
+    """(rows, cols) plane -> per-8x8-tile compressed DCT coefficients.
+
+    mode="topk": keep^2 largest-|.| coefficients per tile (contractive —
+    required under error feedback). Returns (values int8 (nr,nc,K),
+    indices u8 (nr,nc,K), scale f32 (nr,nc)).
+    mode="corner": the paper's fixed k x k low-frequency corner (indices are
+    a constant; returned anyway for a uniform interface).
+    """
+    z = _tiles(g)                                        # (nr, nc, 64)
+    kk = keep * keep
+    if mode == "corner":
+        ii = (jnp.arange(BLOCK)[:, None] * BLOCK + jnp.arange(BLOCK)[None, :])
+        idx_const = ii[:keep, :keep].reshape(-1)         # (kk,)
+        vals = z[..., idx_const]
+        idx = jnp.broadcast_to(idx_const.astype(jnp.uint8), vals.shape)
+    else:
+        mag = jnp.abs(z)
+        _, top_idx = jax.lax.top_k(mag, kk)              # (nr, nc, kk)
+        vals = jnp.take_along_axis(z, top_idx, axis=-1)
+        idx = top_idx.astype(jnp.uint8)
+    amax = jnp.max(jnp.abs(vals), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(vals / scale), -127, 127).astype(jnp.int8)
+    return q, idx, scale[..., 0]
+
+
+def decompress_leaf(q: jax.Array, idx: jax.Array, scale: jax.Array, shape,
+                    dtype=jnp.float32) -> jax.Array:
+    nr, nc, kk = q.shape
+    vals = q.astype(jnp.float32) * scale[..., None]
+    z = jnp.zeros((nr, nc, BLOCK * BLOCK), jnp.float32)
+    z = jnp.put_along_axis(z, idx.astype(jnp.int32), vals, axis=-1,
+                           inplace=False)
+    return _untile(z, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state
+# ---------------------------------------------------------------------------
+
+def init_residual(params: Any) -> Any:
+    """Zero residual for every compressible leaf; None markers elsewhere."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32) if _compressible(p) else jnp.zeros((), jnp.float32),
+        params,
+    )
+
+
+@dataclass(frozen=True)
+class GradCompressConfig:
+    keep: int = 5          # keep^2 coefficients per 8x8 tile
+    mode: str = "topk"     # topk (EF-safe) | corner (paper-faithful; diverges
+                           # under EF — kept for the ablation)
+    enabled: bool = True
+
+
+# ---------------------------------------------------------------------------
+# The cross-pod exchange (call INSIDE shard_map with a manual 'pod' axis)
+# ---------------------------------------------------------------------------
+
+def exchange_compressed(grads: Any, residual: Any, cfg: GradCompressConfig,
+                        axis: str = "pod") -> tuple[Any, Any]:
+    """All-reduce `grads` over `axis` in compressed form with error feedback.
+
+    Returns (mean_grads, new_residual). Must run where `axis` is a manual
+    (shard_map) axis; data/model sharding of the leaves themselves may remain
+    under GSPMD auto mode.
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    res_flat = jax.tree.leaves(residual)
+    out, new_res = [], []
+    for g, r in zip(flat, res_flat):
+        if not _compressible(g):
+            out.append(jax.lax.pmean(g, axis))
+            new_res.append(r)
+            continue
+        g_fb = g.astype(jnp.float32) + r
+        q, idx, scale = compress_leaf(g_fb, cfg.keep, cfg.mode)
+        # wire payload: int8 values + u8 indices + f32 scale, every pod
+        q_all = jax.lax.all_gather(q, axis)          # (npod, ...)
+        i_all = jax.lax.all_gather(idx, axis)
+        s_all = jax.lax.all_gather(scale, axis)
+        approx_own = decompress_leaf(q, idx, scale, g.shape)
+        total = jnp.zeros(g.shape, jnp.float32)
+        npod = q_all.shape[0]
+        for i in range(npod):  # npod is small (2); unrolled decompress-sum
+            total = total + decompress_leaf(q_all[i], i_all[i], s_all[i], g.shape)
+        out.append((total / npod).astype(g.dtype))
+        new_res.append(g_fb - approx_own)
+    return jax.tree.unflatten(treedef, out), jax.tree.unflatten(treedef, new_res)
+
+
+def plain_exchange(grads: Any, axis: str = "pod") -> Any:
+    """Uncompressed baseline: f32 pmean over the pod axis."""
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+
+
+def wire_bytes(params: Any, cfg: GradCompressConfig) -> dict[str, float]:
+    """Analytic wire bytes per step for compressed vs raw exchange."""
+    raw = 0
+    comp = 0
+    for p in jax.tree.leaves(params):
+        raw += p.size * 4
+        if _compressible(p):
+            ntiles = p.size // (BLOCK * BLOCK)
+            per_tile = cfg.keep * cfg.keep * (2 if cfg.mode == "topk" else 1) + 4
+            comp += ntiles * per_tile
+        else:
+            comp += p.size * 4
+    return {"raw_bytes": float(raw), "compressed_bytes": float(comp),
+            "ratio": comp / max(raw, 1)}

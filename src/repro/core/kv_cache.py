@@ -1,0 +1,302 @@
+"""KVCompress: DCT-truncated int8 KV cache (DESIGN.md §3.2).
+
+The paper stores interlayer feature maps compressed so the expensive memory
+level never holds raw data. In serving, the analogous storage is the KV
+cache: at 32k-512k contexts it dominates HBM capacity AND decode-step HBM
+bandwidth (every step re-reads the whole cache).
+
+Layout: per (layer, batch, kv-head) the (S, hd) plane is tiled into 8x8
+(seq-block x feature-block) tiles; each tile keeps only its top-left k x k
+low-frequency DCT corner as int8 with a per-tile f32 scale:
+
+  packed : (L, B, S/8, hd/8, k, k) int8
+  scale  : (L, B, S/8, hd/8)       f32
+
+Compressed bytes/elem = (k*k + 4) / 64 vs 2 (bf16): k=4 -> 0.31 B (6.4x),
+k=6 -> 0.63 B (3.2x).  Because decode is memory-bound, the bandwidth saving
+is the same factor — that is the paper's DMA-bandwidth argument verbatim.
+
+Decode appends single tokens, which don't fill an 8-token seq block, so the
+cache keeps a RAW TAIL of up to 8 tokens; when the tail fills, the whole
+block is DCT-compressed into the packed store (lax.cond, fixed shapes).
+Attention consumes the packed store via `attend_compressed`, which
+decompresses per KV chunk INSIDE the flash-attention scan — the HBM traffic
+for history is int8 packed + scales only, mirroring the paper's "IDCT fused
+into the PE stream".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct as dct_lib
+
+BLOCK = 8
+
+
+def _dct_k(keep: int, dtype=jnp.float32) -> jax.Array:
+    """(keep, 8) top rows of the orthonormal DCT matrix."""
+    return jnp.asarray(dct_lib._dct_matrix_np(BLOCK)[:keep], dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tile codec on (S, hd) planes with arbitrary leading dims
+# ---------------------------------------------------------------------------
+
+def compress_kv_blocks(x: jax.Array, keep: int) -> tuple[jax.Array, jax.Array]:
+    """x: (..., S, hd) with S % 8 == 0, hd % 8 == 0.
+
+    Returns (packed (..., S/8, hd/8, k, k) int8, scale (..., S/8, hd/8) f32).
+    """
+    *lead, s, hd = x.shape
+    ck = _dct_k(keep)
+    t = x.reshape(*lead, s // BLOCK, BLOCK, hd // BLOCK, BLOCK)
+    t = jnp.swapaxes(t, -3, -2).astype(jnp.float32)  # (..., S/8, hd/8, 8, 8)
+    z = jnp.einsum("ua,...ab,vb->...uv", ck, t, ck)  # fused DCT + truncate
+    amax = jnp.max(jnp.abs(z), axis=(-1, -2), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(z / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0, 0]
+
+
+def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of compress_kv_blocks -> (..., S, hd)."""
+    *lead, ns, nh, k, _ = packed.shape
+    ck = _dct_k(k)
+    z = packed.astype(jnp.float32) * scale[..., None, None]
+    t = jnp.einsum("ua,...uv,vb->...ab", ck, z, ck)  # zero-pad + IDCT fused
+    t = jnp.swapaxes(t, -3, -2)
+    return t.reshape(*lead, ns * BLOCK, nh * BLOCK).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CompressedKVCache:
+    """Per-model compressed KV store + raw 8-token tail ring.
+
+    Shapes (GQA):
+      packed_k/v : (L, B, S/8, Hkv, hd/8, k, k) int8
+      scale_k/v  : (L, B, S/8, Hkv, hd/8)       f32
+      tail_k/v   : (L, B, 8, Hkv, hd)           raw dtype
+    """
+
+    packed_k: jax.Array
+    scale_k: jax.Array
+    packed_v: jax.Array
+    scale_v: jax.Array
+    tail_k: jax.Array
+    tail_v: jax.Array
+    keep: int
+
+    def tree_flatten(self):
+        return (
+            self.packed_k, self.scale_k, self.packed_v, self.scale_v,
+            self.tail_k, self.tail_v,
+        ), (self.keep,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, keep=aux[0])
+
+    @property
+    def max_seq(self) -> int:
+        return self.packed_k.shape[2] * BLOCK
+
+    def nbytes_per_token_per_layer(self) -> float:
+        """Compressed bytes per token per layer (both K and V)."""
+        _, _, _, hkv, nhd, k, _ = self.packed_k.shape
+        per_block = hkv * nhd * (k * k + 4)  # int8 corner + f32 scale
+        return 2 * per_block / BLOCK
+
+
+def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
+                          dtype=jnp.bfloat16) -> CompressedKVCache:
+    assert max_seq % BLOCK == 0
+    hd = cfg.resolved_head_dim
+    assert hd % BLOCK == 0, f"head_dim {hd} not 8-tileable"
+    l, hkv = cfg.n_layers, cfg.n_kv_heads
+    ns, nh = max_seq // BLOCK, hd // BLOCK
+    mk = lambda: jnp.zeros((l, batch, ns, hkv, nh, keep, keep), jnp.int8)
+    sc = lambda: jnp.zeros((l, batch, ns, hkv, nh), jnp.float32)
+    tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
+    return CompressedKVCache(mk(), sc(), mk(), sc(), tl(), tl(), keep)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode update (operates on the [B, ...] slices for one layer)
+# ---------------------------------------------------------------------------
+
+def update_layer(
+    layer_cache: dict[str, jax.Array],
+    k_new: jax.Array,  # (B, 1, Hkv, hd)
+    v_new: jax.Array,
+    pos: jax.Array,    # scalar absolute position of the new token
+    keep: int,
+) -> dict[str, jax.Array]:
+    """Write the new token into the tail; flush the block when it fills.
+
+    layer_cache keys: packed_k/scale_k/packed_v/scale_v (B, S/8, Hkv, hd/8, k, k)
+    / (B, S/8, Hkv, hd/8), tail_k/tail_v (B, 8, Hkv, hd).
+    """
+    slot = jnp.mod(pos, BLOCK)
+    tail_k = jax.lax.dynamic_update_slice(
+        layer_cache["tail_k"], k_new.astype(layer_cache["tail_k"].dtype), (0, slot, 0, 0)
+    )
+    tail_v = jax.lax.dynamic_update_slice(
+        layer_cache["tail_v"], v_new.astype(layer_cache["tail_v"].dtype), (0, slot, 0, 0)
+    )
+
+    def flush(args):
+        pk, sk, pv, sv, tk, tv = args
+        blk = pos // BLOCK
+        # (B, 8, Hkv, hd) -> (B, Hkv, 8, hd) planes -> compress
+        qk, sck = compress_kv_blocks(jnp.swapaxes(tk, 1, 2), keep)
+        qv, scv = compress_kv_blocks(jnp.swapaxes(tv, 1, 2), keep)
+        # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, 1, Hkv, hd/8, k, k)
+        qk = jnp.swapaxes(qk, 1, 2)
+        qv = jnp.swapaxes(qv, 1, 2)
+        sck = jnp.swapaxes(sck, 1, 2)
+        scv = jnp.swapaxes(scv, 1, 2)
+        pk = jax.lax.dynamic_update_slice(pk, qk, (0, blk, 0, 0, 0, 0))
+        sk = jax.lax.dynamic_update_slice(sk, sck, (0, blk, 0, 0))
+        pv = jax.lax.dynamic_update_slice(pv, qv, (0, blk, 0, 0, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, scv, (0, blk, 0, 0))
+        return pk, sk, pv, sv
+
+    def keep_tail(args):
+        pk, sk, pv, sv, _, _ = args
+        return pk, sk, pv, sv
+
+    pk, sk, pv, sv = jax.lax.cond(
+        slot == BLOCK - 1,
+        flush,
+        keep_tail,
+        (
+            layer_cache["packed_k"], layer_cache["scale_k"],
+            layer_cache["packed_v"], layer_cache["scale_v"],
+            tail_k, tail_v,
+        ),
+    )
+    return dict(packed_k=pk, scale_k=sk, packed_v=pv, scale_v=sv,
+                tail_k=tail_k, tail_v=tail_v)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention over the compressed store (decode: Sq == 1)
+# ---------------------------------------------------------------------------
+
+def _repeat_heads(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, Hkv, S, hd) -> (B, Hkv*n_rep, S, hd)."""
+    if n_rep == 1:
+        return x
+    b, hkv, s, hd = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, hkv, n_rep, s, hd)).reshape(b, hkv * n_rep, s, hd)
+
+
+def attend_compressed(
+    q: jax.Array,                 # (B, 1, H, hd)
+    layer_cache: dict[str, jax.Array],
+    pos: jax.Array,
+    keep: int,
+    *,
+    kv_block: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax decode attention where K/V history is decompressed per
+    chunk INSIDE the scan — compressed bytes are what stream from HBM.
+
+    The raw tail (positions pos - pos%8 .. pos) is attended separately and
+    merged with the same running-max algebra.
+    """
+    b, sq, h, hd = q.shape
+    pk = layer_cache["packed_k"]
+    _, nblocks_total, hkv, nhd, k, _ = pk.shape
+    n_rep = h // hkv
+    max_seq = nblocks_total * BLOCK
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kv_block = min(kv_block, max_seq)
+    while max_seq % kv_block:  # shrink to a divisor (max_seq is a mult of 8)
+        kv_block -= BLOCK
+    assert kv_block % BLOCK == 0 and kv_block > 0
+    bpc = kv_block // BLOCK
+    nchunks = max_seq // kv_block
+
+    qf = (q.astype(jnp.float32) * scale)[:, 0]           # (B, H, hd)
+    flushed = (pos // BLOCK) * BLOCK                      # tokens in packed store
+
+    def chunk_body(carry, c):
+        m, l, acc = carry
+        start = c * bpc
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, bpc, 1)
+        # planes per (B, Hkv): (B, nb, Hkv, ...) -> (B, Hkv, nb, ...)
+        kc = decompress_kv_blocks(
+            jnp.swapaxes(sl(layer_cache["packed_k"]), 1, 2),
+            jnp.swapaxes(sl(layer_cache["scale_k"]), 1, 2), jnp.float32,
+        )                                                 # (B, Hkv, kv_block, hd)
+        vc = decompress_kv_blocks(
+            jnp.swapaxes(sl(layer_cache["packed_v"]), 1, 2),
+            jnp.swapaxes(sl(layer_cache["scale_v"]), 1, 2), jnp.float32,
+        )
+        kr = _repeat_heads(kc, n_rep)                     # (B, H, kv_block, hd)
+        vr = _repeat_heads(vc, n_rep)
+        kv_pos = start * BLOCK + jnp.arange(kv_block)
+        valid = kv_pos < flushed                          # only flushed blocks
+        s = jnp.einsum("bhd,bhkd->bhk", qf, kr)
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(valid[None, None], jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhk,bhkd->bhd", p, vr)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    acc0 = jnp.zeros((b, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk_body, (m0, l0, acc0), jnp.arange(nchunks))
+
+    # ---- raw tail: positions flushed .. pos (inclusive) -------------------
+    tk = jnp.swapaxes(layer_cache["tail_k"], 1, 2).astype(jnp.float32)  # (B,Hkv,8,hd)
+    tv = jnp.swapaxes(layer_cache["tail_v"], 1, 2).astype(jnp.float32)
+    tkr = _repeat_heads(tk, n_rep)
+    tvr = _repeat_heads(tv, n_rep)
+    tail_pos = flushed + jnp.arange(BLOCK)
+    tvalid = tail_pos <= pos
+    st = jnp.einsum("bhd,bhkd->bhk", qf, tkr)
+    st = jnp.where(tvalid[None, None], st, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(st, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    pt = jnp.where(tvalid[None, None], jnp.exp(st - m_safe[..., None]), 0.0)
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l = l * alpha + jnp.sum(pt, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bhk,bhkd->bhd", pt, tvr)
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, H, hd)
+    return out[:, None].astype(q.dtype)           # (B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Bulk prefill: compress a whole prompt's K/V at once
+# ---------------------------------------------------------------------------
+
+def prefill_compress(
+    k: jax.Array,  # (B, S, Hkv, hd), S % 8 == 0
+    v: jax.Array,
+    keep: int,
+) -> dict[str, jax.Array]:
+    """Compress a full prompt's K/V for one layer into cache layout."""
+    kq, ks = compress_kv_blocks(jnp.swapaxes(k, 1, 2), keep)  # (B,Hkv,S/8,hd/8,k,k)
+    vq, vs = compress_kv_blocks(jnp.swapaxes(v, 1, 2), keep)
+    return dict(
+        packed_k=jnp.swapaxes(kq, 1, 2), scale_k=jnp.swapaxes(ks, 1, 2),
+        packed_v=jnp.swapaxes(vq, 1, 2), scale_v=jnp.swapaxes(vs, 1, 2),
+    )

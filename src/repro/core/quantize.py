@@ -1,0 +1,149 @@
+"""Two-step quantization of DCT coefficient blocks (paper Eq. 7-10).
+
+Step 1 ("low-precision GEMM"): affine min-max quantization of the whole
+coefficient tensor to m-bit unsigned integers (Eq. 7).
+Step 2 ("Q-table quantization"): element-wise division by a JPEG-style 8x8
+table (Eq. 8).  Four quantization levels (a 2-bit register in the paper) scale
+the table; early layers use aggressive tables, deep layers gentle ones.
+
+Inverse quantization is Eq. 9-10.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The JPEG luminance quantization table (Annex K of the JPEG standard) — the
+# paper says "We refer to the JPEG Q-table which has small values in the top
+# left ... and large values in the bottom right".
+JPEG_LUMA_QTABLE = np.array(
+    [
+        [16, 11, 10, 16, 24, 40, 51, 61],
+        [12, 12, 14, 19, 26, 58, 60, 55],
+        [14, 13, 16, 24, 40, 57, 69, 56],
+        [14, 17, 22, 29, 51, 87, 80, 62],
+        [18, 22, 37, 56, 68, 109, 103, 77],
+        [24, 35, 55, 64, 81, 104, 113, 92],
+        [49, 64, 78, 87, 103, 121, 120, 101],
+        [72, 92, 95, 98, 112, 100, 103, 99],
+    ],
+    dtype=np.float64,
+)
+
+# Four quantization levels (the paper's 2-bit register).  Level 0 is the most
+# aggressive (first few layers: "Q-table values ... larger in order to get a
+# better compression ratio"), level 3 the gentlest (deep layers: "adjusted to
+# smaller values to ensure the accuracy of the network").  The scale follows
+# the JPEG quality-factor convention.
+QUALITY_PER_LEVEL = (25, 50, 75, 92)
+
+
+@functools.lru_cache(maxsize=None)
+def qtable_for_level(level: int) -> np.ndarray:
+    """JPEG quality-factor scaling of the base table (libjpeg convention)."""
+    q = QUALITY_PER_LEVEL[level]
+    scale = 5000.0 / q if q < 50 else 200.0 - 2.0 * q
+    t = np.floor((JPEG_LUMA_QTABLE * scale + 50.0) / 100.0)
+    return np.clip(t, 1.0, 255.0)
+
+
+def qtable(level: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.asarray(qtable_for_level(level), dtype=dtype)
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """Per-tensor affine range for step 1 (Eq. 7).
+
+    `zero_point` is the integer code of the real value 0.  The paper's Eq. 7/8
+    as literally written divide the *unsigned* code by the Q-table, which would
+    discard Fmin-adjacent (not zero-adjacent) coefficients and destroy the
+    signal; the claimed outcome ("large number of zeros in the bottom right
+    corner") requires the JPEG-style level shift, so Q-table quantization is
+    applied to the zero-centred code (see DESIGN.md §6).
+    """
+
+    fmin: jax.Array  # scalar (or broadcastable per-channel) minimum
+    fmax: jax.Array
+    bits: int = 8
+
+    @property
+    def imax(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def zero_point(self) -> jax.Array:
+        scale = self.imax / (self.fmax - self.fmin)
+        return jnp.round(jnp.clip(-self.fmin * scale, 0, self.imax))
+
+
+def compute_range(coefs: jax.Array, axis=None) -> tuple[jax.Array, jax.Array]:
+    fmin = jnp.min(coefs, axis=axis, keepdims=axis is not None)
+    fmax = jnp.max(coefs, axis=axis, keepdims=axis is not None)
+    # Guard degenerate range (constant tensor) to keep Eq. 7 well defined.
+    fmax = jnp.where(fmax - fmin < 1e-12, fmin + 1.0, fmax)
+    return fmin, fmax
+
+
+def quantize_minmax(coefs: jax.Array, params: QuantParams) -> jax.Array:
+    """Eq. 7: Q1 = round((F - Fmin) / (Fmax - Fmin) * imax). Unsigned m-bit."""
+    scale = params.imax / (params.fmax - params.fmin)
+    q1 = jnp.round((coefs - params.fmin) * scale)
+    return jnp.clip(q1, 0, params.imax)
+
+
+def quantize_qtable(q1: jax.Array, level: int, zero_point=0.0) -> jax.Array:
+    """Eq. 8 with level shift: Q2 = round((Q1 - zp) / QT) over (8, 8) blocks."""
+    qt = qtable(level, q1.dtype)
+    return jnp.round((q1 - zero_point) / qt)
+
+
+def dequantize_qtable(q2: jax.Array, level: int, zero_point=0.0) -> jax.Array:
+    """Eq. 9 with level shift: Q1' = Q2 * QT + zp."""
+    return q2 * qtable(level, q2.dtype) + zero_point
+
+
+def dequantize_minmax(q1: jax.Array, params: QuantParams) -> jax.Array:
+    """Eq. 10: F' = Q1'/imax * (Fmax - Fmin) + Fmin."""
+    return q1 / params.imax * (params.fmax - params.fmin) + params.fmin
+
+
+def quantize_blocks(
+    coefs: jax.Array, level: int, bits: int = 8
+) -> tuple[jax.Array, QuantParams]:
+    """Full two-step quantization of (..., 8, 8) DCT coefficient blocks."""
+    fmin, fmax = compute_range(coefs)
+    params = QuantParams(fmin=fmin, fmax=fmax, bits=bits)
+    q1 = quantize_minmax(coefs, params)
+    q2 = quantize_qtable(q1, level, params.zero_point)
+    return q2, params
+
+
+def dequantize_blocks(q2: jax.Array, params: QuantParams, level: int) -> jax.Array:
+    q1 = dequantize_qtable(q2, level, params.zero_point)
+    return dequantize_minmax(q1, params)
+
+
+# ---------------------------------------------------------------------------
+# Structured frequency truncation (TPU runtime path — DESIGN.md §2).
+# Keep the top-left k x k low-frequency corner of each 8x8 block as dense int8.
+# ---------------------------------------------------------------------------
+
+def truncation_mask(k: int, block: int = 8, dtype=jnp.float32) -> jax.Array:
+    """1 on the top-left k x k corner, 0 elsewhere."""
+    idx = jnp.arange(block)
+    return ((idx[:, None] < k) & (idx[None, :] < k)).astype(dtype)
+
+
+def level_to_keep(level: int) -> int:
+    """Map the paper's 4 quantization levels to a kept corner size k.
+
+    Chosen so the zero pattern matches the Q-table zero statistics measured on
+    1/f inputs (benchmarks/codec_compare.py): aggressive level 0 keeps 2x2,
+    gentle level 3 keeps 6x6.
+    """
+    return (2, 3, 4, 6)[level]

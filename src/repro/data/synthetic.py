@@ -1,0 +1,99 @@
+"""Deterministic synthetic data pipeline.
+
+No datasets ship in this container, so the framework generates its own:
+
+* `natural_images` — 1/f^alpha power-spectrum RGB images. Natural images have
+  ~1/f^2 power spectra; this is the statistic that makes the paper's DCT
+  compression work on early-layer feature maps, so it is the right null model
+  for reproducing Table III compression ratios without PASCAL VOC.
+* `shapes_dataset` — procedural 4-class shape classification (circle, square,
+  triangle, cross) for the trained accuracy-loss experiment.
+* `TokenStream` — deterministic, host-shardable LM token batches with a
+  Zipfian unigram mixed with structured n-gram correlations (so losses and
+  activations are not degenerate white noise).
+
+Everything is seeded and indexable by (step, host) so that elastic restarts
+replay exactly (runtime/fault.py relies on this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def natural_images(seed: int, batch: int, h: int, w: int, c: int = 3, alpha: float = 2.0) -> np.ndarray:
+    """1/f^alpha images, unit variance per channel, NHWC float32."""
+    rng = np.random.default_rng(seed)
+    fy = np.fft.fftfreq(h)[:, None]
+    fx = np.fft.fftfreq(w)[None, :]
+    f = np.sqrt(fy**2 + fx**2)
+    f[0, 0] = 1.0
+    filt = 1.0 / f ** (alpha / 2.0)
+    spec = rng.standard_normal((batch, c, h, w)) + 1j * rng.standard_normal((batch, c, h, w))
+    img = np.fft.ifft2(spec * filt, axes=(-2, -1)).real
+    img -= img.mean(axis=(-2, -1), keepdims=True)
+    img /= img.std(axis=(-2, -1), keepdims=True) + 1e-9
+    return np.transpose(img, (0, 2, 3, 1)).astype(np.float32)
+
+
+def shapes_dataset(seed: int, n: int, size: int = 32) -> tuple[np.ndarray, np.ndarray]:
+    """Procedural shapes: returns (images NHWC (n,size,size,1), labels (n,))."""
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, size, size, 1), np.float32)
+    labels = rng.integers(0, 4, n)
+    yy, xx = np.mgrid[0:size, 0:size]
+    for i in range(n):
+        cx, cy = rng.uniform(size * 0.3, size * 0.7, 2)
+        r = rng.uniform(size * 0.15, size * 0.3)
+        lab = labels[i]
+        if lab == 0:  # circle
+            m = (xx - cx) ** 2 + (yy - cy) ** 2 < r**2
+        elif lab == 1:  # square
+            m = (np.abs(xx - cx) < r) & (np.abs(yy - cy) < r)
+        elif lab == 2:  # triangle
+            m = (yy - cy > -r) & (np.abs(xx - cx) < (yy - cy + r) * 0.6) & (yy - cy < r)
+        else:  # cross
+            m = (np.abs(xx - cx) < r * 0.35) | (np.abs(yy - cy) < r * 0.35)
+            m &= (np.abs(xx - cx) < r) & (np.abs(yy - cy) < r)
+        img = m.astype(np.float32)
+        img += rng.normal(0, 0.15, img.shape)  # sensor noise
+        imgs[i, :, :, 0] = img
+    return imgs, labels.astype(np.int32)
+
+
+@dataclass(frozen=True)
+class TokenStream:
+    """Deterministic sharded LM token stream.
+
+    batch(step, shard, num_shards) is a pure function of its arguments — any
+    host can regenerate any shard at any step, which is what makes elastic
+    restart with a different data-parallel size exact (DESIGN.md FT section).
+    """
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int, shard: int = 0, num_shards: int = 1) -> dict[str, np.ndarray]:
+        assert self.global_batch % num_shards == 0
+        b = self.global_batch // num_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard, num_shards])
+        )
+        # Zipfian unigrams with injected repeated motifs (n-gram structure)
+        z = rng.zipf(1.3, size=(b, self.seq_len)).astype(np.int64)
+        tokens = (z - 1) % self.vocab_size
+        # motif injection: copy short spans forward to create learnable bigrams
+        for row in range(b):
+            for _ in range(self.seq_len // 64):
+                src = rng.integers(0, self.seq_len - 16)
+                dst = rng.integers(0, self.seq_len - 16)
+                tokens[row, dst : dst + 8] = tokens[row, src : src + 8]
+        inputs = tokens[:, :-1]
+        labels = tokens[:, 1:]
+        return {
+            "tokens": np.pad(inputs, ((0, 0), (0, 1))).astype(np.int32),
+            "labels": np.pad(labels, ((0, 0), (0, 1)), constant_values=-1).astype(np.int32),
+        }

@@ -1,0 +1,2 @@
+"""dct8x8 kernel package."""
+from repro.kernels.dct8x8 import kernel, ops, ref

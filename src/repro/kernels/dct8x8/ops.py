@@ -1,0 +1,31 @@
+"""Jitted public wrappers for the dct8x8 Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dct8x8 import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
+def dct2(x: jax.Array, inverse: bool = False, interpret: bool | None = None) -> jax.Array:
+    """Blocked 8x8 2-D DCT (or IDCT) of a plane, any leading batch dims.
+
+    interpret=None auto-selects: compiled on TPU, interpret elsewhere (CPU CI).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    plane = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    out = _k.dct2_plane_pallas(plane, inverse=inverse, interpret=interpret)
+    return out.reshape(shape)
+
+
+def idct2(x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    return dct2(x, inverse=True, interpret=interpret)

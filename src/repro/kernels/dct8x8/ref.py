@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the blocked 8x8 DCT/IDCT plane kernels.
+
+Semantics: input is a 2-D plane (R, C) with R, C multiples of 8; every aligned
+8x8 block is independently 2-D DCT-II transformed (Z = C X C^T) in place.
+"""
+import jax.numpy as jnp
+
+from repro.core import dct as dct_lib
+
+
+def dct2_plane(x: jnp.ndarray) -> jnp.ndarray:
+    blocks = dct_lib._blockize(x)
+    z = dct_lib.dct2_blocks(blocks, jnp.float32)
+    return dct_lib._unblockize(z).astype(x.dtype)
+
+
+def idct2_plane(z: jnp.ndarray) -> jnp.ndarray:
+    blocks = dct_lib._blockize(z)
+    x = dct_lib.idct2_blocks(blocks, jnp.float32)
+    return dct_lib._unblockize(x).astype(z.dtype)

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused DCT-decompress + decode attention.
+
+The dry-run measurement (EXPERIMENTS.md §Perf, yi-6b decode_32k) shows why
+this kernel must exist: in pure XLA the compressed KV store DECOMPRESSES to
+a full-size bf16 K/V in HBM before attention reads it — ~73 MB/layer of
+traffic vs 34 MB raw, i.e. compression LOSES without fusion. This kernel is
+the paper's architecture transplanted to TPU: compressed blocks stream from
+HBM (int8, (k*k+4)/128 of bf16 bytes), the IDCT runs in VMEM as two skinny
+constant matmuls, and the attention consumes K/V tiles that never exist in
+HBM — the analogue of the paper's IDCT feeding the PE array "in one
+computing stream".
+
+Layout per (batch, kv-head) plane:
+  packed_k/v : (S/8, hd/8, k, k) int8     scale_k/v : (S/8, hd/8) f32
+  q          : (H, hd) — the n_rep query heads sharing this kv head
+  out        : (H, hd) f32 — attention over the FLUSHED history
+               (< pos//8*8; the raw 8-token tail is merged by ops.py with
+               the same online-softmax algebra)
+
+Grid: (S / TILE_S,) sequence tiles; the online-softmax running state
+(m, l, acc) lives in VMEM scratch carried across sequentially-executed grid
+steps.
+
+VMEM per step (TILE_S=512, hd=128, keep=4): packed 2x16 KB int8 + scales
+2x4 KB + decompressed K/V tiles 2x256 KB f32 + q/out/state ~130 KB — well
+inside the ~16 MB budget, leaving room for double-buffered HBM pipelining.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dct import _dct_matrix_np
+
+BLOCK = 8
+
+
+def _dct_k_np(keep: int) -> np.ndarray:
+    return _dct_matrix_np(BLOCK)[:keep].astype(np.float32)
+
+
+def _attend_kernel(
+    pos_ref,                    # scalar prefetch: () int32
+    pk_ref, sk_ref, pv_ref, sv_ref, q_ref, ck_ref,
+    o_ref,
+    m_ref, l_ref, acc_ref,      # VMEM scratch (carried)
+    *, keep: int, tile_s: int, scale: float,
+):
+    ts8 = tile_s // BLOCK
+    step = pl.program_id(0)
+    ck = ck_ref[...]                           # (k, 8) DCT constant (VMEM)
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def dec(p_ref, s_ref):
+        """int8 tile -> f32 (tile_s, hd): per-8x8-block z -> Ck^T z Ck."""
+        z = p_ref[...].astype(jnp.float32) * s_ref[...][..., None, None]
+        t = jnp.einsum("ua,ijuv,vb->ijab", ck, z, ck)   # (ts8, nh, 8, 8)
+        t = jnp.swapaxes(t, 1, 2)                       # (ts8, 8, nh, 8)
+        return t.reshape(ts8 * BLOCK, -1)
+
+    kt = dec(pk_ref, sk_ref)
+    vt = dec(pv_ref, sv_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale          # (H, hd)
+    s = jax.lax.dot(q, kt.T, preferred_element_type=jnp.float32)  # (H, tile_s)
+    kv_pos = step * tile_s + jax.lax.broadcasted_iota(jnp.int32, (1, tile_s), 1)
+    valid = kv_pos < (pos_ref[0] // BLOCK) * BLOCK      # flushed blocks only
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, vt, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finalize():
+        # emit un-normalized stats so the caller can merge the raw tail
+        o_ref[0] = acc_ref[...]
+        o_ref[1] = jnp.broadcast_to(m_ref[...], acc_ref.shape)
+        o_ref[2] = jnp.broadcast_to(l_ref[...], acc_ref.shape)
+
+
+def attend_compressed_plane(
+    packed_k: jax.Array,   # (S/8, hd/8, k, k) int8
+    scale_k: jax.Array,    # (S/8, hd/8) f32
+    packed_v: jax.Array,
+    scale_v: jax.Array,
+    q: jax.Array,          # (H, hd)
+    pos: jax.Array,        # () int32
+    *,
+    tile_s: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused decompress+attend over one (batch, kv-head) plane.
+
+    Returns (acc (H, hd), m (H, hd) broadcast, l (H, hd) broadcast) —
+    un-normalized online-softmax stats over the flushed history, ready for
+    tail merging. out = acc / l after merging.
+    """
+    ns, nh, k, _ = packed_k.shape
+    s_total = ns * BLOCK
+    hd = nh * BLOCK
+    h = q.shape[0]
+    tile_s = min(tile_s, s_total)
+    while s_total % tile_s:
+        tile_s -= BLOCK
+    ts8 = tile_s // BLOCK
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s_total // tile_s,),
+        in_specs=[
+            pl.BlockSpec((ts8, nh, k, k), lambda i, pos: (i, 0, 0, 0)),
+            pl.BlockSpec((ts8, nh), lambda i, pos: (i, 0)),
+            pl.BlockSpec((ts8, nh, k, k), lambda i, pos: (i, 0, 0, 0)),
+            pl.BlockSpec((ts8, nh), lambda i, pos: (i, 0)),
+            pl.BlockSpec((h, hd), lambda i, pos: (0, 0)),
+            pl.BlockSpec((k, BLOCK), lambda i, pos: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, h, hd), lambda i, pos: (0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),   # m
+            pltpu.VMEM((h, 1), jnp.float32),   # l
+            pltpu.VMEM((h, hd), jnp.float32),  # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_attend_kernel, keep=k, tile_s=tile_s,
+                          scale=1.0 / float(np.sqrt(hd))),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((3, h, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.reshape(1), packed_k, scale_k, packed_v, scale_v, q,
+      jnp.asarray(_dct_k_np(k)))
+    acc, m_b, l_b = out[0], out[1], out[2]
+    return acc, m_b[:, :1], l_b[:, :1]

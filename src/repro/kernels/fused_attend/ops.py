@@ -1,0 +1,62 @@
+"""jit-able wrapper: fused kernel over all (batch, kv-head) planes + raw-tail
+merge — the drop-in decode attention for the compressed KV cache."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_attend.kernel import attend_compressed_plane
+
+BLOCK = 8
+
+
+def attend_with_tail(
+    q: jax.Array,                 # (B, 1, H, hd)
+    layer_cache: dict,            # per-layer compressed cache slices
+    pos: jax.Array,
+    *,
+    tile_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Kernel-backed equivalent of core.kv_cache.attend_compressed."""
+    b, _, h, hd = q.shape
+    pk = layer_cache["packed_k"]
+    hkv = pk.shape[2]
+    n_rep = h // hkv
+
+    # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
+    def plane_axes(x):
+        return jnp.swapaxes(x, 1, 2)
+
+    qg = q[:, 0].reshape(b, hkv, n_rep, hd)
+
+    kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
+                             interpret=interpret)
+    # vmap over batch then kv-head
+    acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
+                         in_axes=(0, 0, 0, 0, 0, None))(
+        plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
+        plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
+        qg, pos,
+    )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
+
+    # ---- merge the raw tail (positions pos//8*8 .. pos) -------------------
+    tk = jnp.swapaxes(layer_cache["tail_k"], 1, 2).astype(jnp.float32)  # (B,Hkv,8,hd)
+    tv = jnp.swapaxes(layer_cache["tail_v"], 1, 2).astype(jnp.float32)
+    qf = qg.astype(jnp.float32) / np.sqrt(hd)
+    st = jnp.einsum("bgrd,bgtd->bgrt", qf, tk)          # (B, Hkv, rep, 8)
+    flushed = (pos // BLOCK) * BLOCK
+    tail_pos = flushed + jnp.arange(BLOCK)
+    tvalid = tail_pos <= pos
+    st = jnp.where(tvalid[None, None, None], st, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(st, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    pt = jnp.where(tvalid[None, None, None], jnp.exp(st - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l2 = l * alpha + jnp.sum(pt, axis=-1, keepdims=True)
+    acc2 = acc * alpha + jnp.einsum("bgrt,bgtd->bgrd", pt, tv)
+    out = acc2 / jnp.maximum(l2, 1e-30)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

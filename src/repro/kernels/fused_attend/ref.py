@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused decompress+attend kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_cache as kvc
+
+BLOCK = 8
+
+
+def attend_compressed_plane_ref(packed_k, scale_k, packed_v, scale_v, q, pos):
+    """Oracle: decompress fully, masked softmax stats over flushed history.
+
+    Returns (acc, m, l) matching kernel.attend_compressed_plane.
+    """
+    kt = kvc.decompress_kv_blocks(packed_k[None], scale_k[None], jnp.float32)[0]
+    vt = kvc.decompress_kv_blocks(packed_v[None], scale_v[None], jnp.float32)[0]
+    hd = kt.shape[-1]
+    s_total = kt.shape[0]
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    s = qf @ kt.T                                       # (H, S)
+    valid = jnp.arange(s_total) < (pos // BLOCK) * BLOCK
+    s = jnp.where(valid[None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid[None], jnp.exp(s - m_safe), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = p @ vt
+    return acc, m, l

@@ -1,0 +1,2 @@
+"""fused_compress kernel package."""
+from repro.kernels.fused_compress import kernel, ops, ref

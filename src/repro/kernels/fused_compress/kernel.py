@@ -1,0 +1,147 @@
+"""Pallas TPU kernels: fused DCT + frequency-truncation + int8 quant codec.
+
+This is the paper's "combine compression, decompression, and CNN acceleration
+into one computing stream" adapted to TPU (DESIGN.md §2): activations make
+exactly ONE HBM round-trip in compressed form; the transform+quant happens in
+VMEM at the compute boundary.
+
+Key identity: truncating Z = C X C^T to its kxk low-frequency corner equals
+
+    packed = kron(I, C[:k,:]) @ X @ kron(I, C[:k,:])^T
+
+i.e. fused DCT+truncation is two *skinny rectangular matmuls* with constant
+operands — the compressed tile never exists in full 8x8 form.  Decompression
+is the transpose pair.  Both run at full MXU rate; the skinny constant means
+the compress matmuls also do ~k/8 of the FLOPs of a full transform.
+
+VMEM per grid step (TR=TC=128, k=4): in 64 KB f32 + out 8 KB int8 + consts
+2*32 KB — tiny; the Pallas pipeline double-buffers HBM<->VMEM around it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.dct import _dct_matrix_np
+
+BLOCK = 8
+
+
+@functools.lru_cache(maxsize=None)
+def block_diag_dct_rows_np(size: int, keep: int) -> np.ndarray:
+    """kron(I_{size/8}, C8[:keep, :]) — fused DCT+truncate constant."""
+    assert size % BLOCK == 0
+    ck = _dct_matrix_np(BLOCK).astype(np.float32)[:keep, :]
+    return np.kron(np.eye(size // BLOCK, dtype=np.float32), ck)
+
+
+def _compress_kernel(x_ref, bdr_ref, bdc_ref, packed_ref, scale_ref, *, keep: int):
+    x = x_ref[...].astype(jnp.float32)
+    # fused DCT + corner extraction: (TR*k/8, TC*k/8)
+    z = jax.lax.dot(bdr_ref[...], x, preferred_element_type=jnp.float32)
+    z = jax.lax.dot(z, bdc_ref[...].T, preferred_element_type=jnp.float32)
+    nh = z.shape[0] // keep
+    nw = z.shape[1] // keep
+    zb = z.reshape(nh, keep, nw, keep)
+    amax = jnp.max(jnp.abs(zb), axis=(1, 3), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(zb / scale), -127, 127)
+    packed_ref[...] = q.reshape(z.shape).astype(jnp.int8)
+    scale_ref[...] = scale[:, 0, :, 0]
+
+
+def _decompress_kernel(packed_ref, scale_ref, bdr_ref, bdc_ref, o_ref, *, keep: int):
+    q = packed_ref[...].astype(jnp.float32)
+    scale = scale_ref[...]
+    nh, nw = scale.shape
+    zb = q.reshape(nh, keep, nw, keep) * scale[:, None, :, None]
+    z = zb.reshape(q.shape)
+    # X = bdr_k^T @ Z_packed @ bdc_k  (zero-pad corner + IDCT, fused)
+    x = jax.lax.dot(bdr_ref[...].T, z, preferred_element_type=jnp.float32)
+    x = jax.lax.dot(x, bdc_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def compress_plane_pallas(
+    x: jax.Array,
+    keep: int,
+    *,
+    tile_r: int = 128,
+    tile_c: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    r, c = x.shape
+    assert r % BLOCK == 0 and c % BLOCK == 0, (r, c)
+    tr = min(tile_r, r)
+    tc = min(tile_c, c)
+    pr = (-r) % tr
+    pc = (-c) % tc
+    xp = jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+    rp, cp = xp.shape
+    kb = keep  # corner size
+    bdr = jnp.asarray(block_diag_dct_rows_np(tr, kb))
+    bdc = jnp.asarray(block_diag_dct_rows_np(tc, kb))
+
+    packed, scale = pl.pallas_call(
+        functools.partial(_compress_kernel, keep=kb),
+        grid=(rp // tr, cp // tc),
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tr * kb // BLOCK, tr), lambda i, j: (0, 0)),
+            pl.BlockSpec((tc * kb // BLOCK, tc), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr * kb // BLOCK, tc * kb // BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((tr // BLOCK, tc // BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp * kb // BLOCK, cp * kb // BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((rp // BLOCK, cp // BLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, bdr, bdc)
+    return packed[: r * kb // BLOCK, : c * kb // BLOCK], scale[: r // BLOCK, : c // BLOCK]
+
+
+def decompress_plane_pallas(
+    packed: jax.Array,
+    scale: jax.Array,
+    keep: int,
+    *,
+    out_dtype=jnp.float32,
+    tile_r: int = 128,
+    tile_c: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    nh, nw = scale.shape
+    r, c = nh * BLOCK, nw * BLOCK
+    tr = min(tile_r, r)
+    tc = min(tile_c, c)
+    pr = (-r) % tr
+    pc = (-c) % tc
+    kb = keep
+    if pr or pc:
+        packed = jnp.pad(packed, ((0, pr * kb // BLOCK), (0, pc * kb // BLOCK)))
+        scale = jnp.pad(scale, ((0, pr // BLOCK), (0, pc // BLOCK)))
+    rp, cp = r + pr, c + pc
+    bdr = jnp.asarray(block_diag_dct_rows_np(tr, kb))
+    bdc = jnp.asarray(block_diag_dct_rows_np(tc, kb))
+
+    out = pl.pallas_call(
+        functools.partial(_decompress_kernel, keep=kb),
+        grid=(rp // tr, cp // tc),
+        in_specs=[
+            pl.BlockSpec((tr * kb // BLOCK, tc * kb // BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((tr // BLOCK, tc // BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((tr * kb // BLOCK, tr), lambda i, j: (0, 0)),
+            pl.BlockSpec((tc * kb // BLOCK, tc), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), out_dtype),
+        interpret=interpret,
+    )(packed, scale, bdr, bdc)
+    return out[:r, :c]

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the fused compress/decompress kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_compress import kernel as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "interpret"))
+def compress(x: jax.Array, keep: int, interpret: bool | None = None):
+    """Fused DCT+truncate+int8 of (..., R, C); R % 8 == C % 8 == 0.
+
+    Returns (packed int8 (..., R*k/8, C*k/8), scale f32 (..., R/8, C/8)).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    if x.ndim == 2:
+        return _k.compress_plane_pallas(x, keep, interpret=interpret)
+    plane = x.reshape(-1, shape[-1])
+    packed, scale = _k.compress_plane_pallas(plane, keep, interpret=interpret)
+    lead = shape[:-2]
+    r, c = shape[-2], shape[-1]
+    return (
+        packed.reshape(*lead, r * keep // 8, c * keep // 8),
+        scale.reshape(*lead, r // 8, c // 8),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "out_dtype", "interpret"))
+def decompress(
+    packed: jax.Array,
+    scale: jax.Array,
+    keep: int,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = not _on_tpu()
+    if packed.ndim == 2:
+        return _k.decompress_plane_pallas(
+            packed, scale, keep, out_dtype=out_dtype, interpret=interpret
+        )
+    lead = packed.shape[:-2]
+    p2 = packed.reshape(-1, packed.shape[-1])
+    s2 = scale.reshape(-1, scale.shape[-1])
+    out = _k.decompress_plane_pallas(
+        p2, s2, keep, out_dtype=out_dtype, interpret=interpret
+    )
+    r = scale.shape[-2] * 8
+    c = scale.shape[-1] * 8
+    return out.reshape(*lead, r, c)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused compress/decompress Pallas kernels.
+
+Semantics (the TPU runtime codec, DESIGN.md §2): for a plane (R, C) with R, C
+multiples of 8 and corner size k:
+
+  compress:   per 8x8 block B, Z = C8 B C8^T; keep the kxk low-frequency
+              corner; per-block symmetric int8 quantization.
+              outputs: packed (R*k/8, C*k/8) int8 plane (corners tiled in
+              block order), scale (R/8, C/8) f32.
+  decompress: exact inverse (dequant, zero-pad corner to 8x8, IDCT).
+"""
+import jax.numpy as jnp
+
+from repro.core import dct as dct_lib
+
+BLOCK = 8
+
+
+def compress_plane(x: jnp.ndarray, keep: int):
+    r, c = x.shape
+    blocks = dct_lib._blockize(x.astype(jnp.float32))          # (r/8, c/8, 8, 8)
+    coefs = dct_lib.dct2_blocks(blocks)
+    corner = coefs[..., :keep, :keep]
+    amax = jnp.max(jnp.abs(corner), axis=(-1, -2), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(corner / scale), -127, 127).astype(jnp.int8)
+    packed = dct_lib._unblockize(q)                            # (r*k/8, c*k/8)
+    return packed, scale[..., 0, 0]
+
+
+def decompress_plane(packed: jnp.ndarray, scale: jnp.ndarray, keep: int, dtype=jnp.float32):
+    nh, nw = scale.shape
+    q = dct_lib._blockize(packed, keep)                        # (nh, nw, k, k)
+    corner = q.astype(jnp.float32) * scale[..., None, None]
+    full = jnp.zeros((nh, nw, BLOCK, BLOCK), jnp.float32)
+    full = full.at[..., :keep, :keep].set(corner)
+    x = dct_lib.idct2_blocks(full)
+    return dct_lib._unblockize(x).astype(dtype)

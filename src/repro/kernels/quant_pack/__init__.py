@@ -1,0 +1,2 @@
+"""quant_pack kernel package."""
+from repro.kernels.quant_pack import kernel, ops, ref

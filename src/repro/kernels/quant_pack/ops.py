@@ -1,0 +1,35 @@
+"""Jitted public wrapper for the quant_pack kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_pack import kernel as _k
+from repro.kernels.quant_pack import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("level", "bits", "interpret"))
+def quant_pack(
+    x: jax.Array,
+    fmin,
+    fmax,
+    level: int = 1,
+    bits: int = 8,
+    interpret: bool | None = None,
+):
+    """Paper-exact quantize+index of a DCT-coefficient plane (R%8==C%8==0).
+
+    Returns (q2 int32 plane, index int8 plane, nnz scalar).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt_plane = _ref.qtable_plane(level, *x.shape)
+    return _k.quant_pack_plane_pallas(
+        x, fmin, fmax, qt_plane, bits=bits, interpret=interpret
+    )

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the paper-exact quantize+bitmap Pallas kernel.
+
+Semantics: given a plane (R, C) of DCT coefficients (R, C multiples of 8),
+global range (fmin, fmax) and a quantization level, apply the paper's two-step
+quantization (Eq. 7-8 with the JPEG level shift) per aligned 8x8 block and emit
+the quantized plane, the 1-bit index plane, and the total non-zero count.
+"""
+import jax.numpy as jnp
+
+from repro.core import quantize as quant_lib
+
+BLOCK = 8
+
+
+def qtable_plane(level: int, r: int, c: int) -> jnp.ndarray:
+    qt = quant_lib.qtable(level)
+    return jnp.tile(qt, (r // BLOCK, c // BLOCK))
+
+
+def quant_pack_plane(x: jnp.ndarray, fmin, fmax, level: int, bits: int = 8):
+    params = quant_lib.QuantParams(jnp.float32(fmin), jnp.float32(fmax), bits)
+    q1 = quant_lib.quantize_minmax(x.astype(jnp.float32), params)
+    qt = qtable_plane(level, *x.shape)
+    q2 = jnp.round((q1 - params.zero_point) / qt)
+    index = (q2 != 0).astype(jnp.int8)
+    nnz = jnp.sum(index.astype(jnp.int32))
+    return q2.astype(jnp.int32), index, nnz

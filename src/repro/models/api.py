@@ -1,0 +1,217 @@
+"""Unified model API: one façade over all 10 architecture families.
+
+`build(arch_id)` returns a `ModelAPI` whose methods are pure functions fit
+for jit/pjit: init, forward (train/prefill), loss, init_cache, decode_step,
+and `input_specs(shape_name)` — the ShapeDtypeStruct stand-ins the multi-pod
+dry-run lowers against (no allocation).
+
+Shape semantics (assignment):
+  train_4k / prefill_32k lower the full-sequence forward;
+  decode_32k / long_500k lower `serve_step` — one new token against a KV
+  cache (or recurrent state) of seq_len.
+
+Modality stubs: [vlm] patches (B, P, D) and [audio] frames (B, T, D) arrive
+as precomputed embeddings. Whisper's decoder is architecturally capped at 448
+tokens, so its "seq" shapes are reinterpreted as (enc 1500, dec<=448) and its
+decode shapes are skipped (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, get_config
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as T
+
+Params = dict[str, Any]
+Batch = dict[str, jax.Array]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, dict]:
+    """Masked softmax CE. logits (B, S, V) f32; labels (B, S) with -1 = pad."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    per_tok = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = per_tok.sum() / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    arch_id: str
+    cfg: ArchConfig
+    init: Callable[..., Params]
+    forward: Callable[..., jax.Array]           # (params, batch, **kw) -> logits
+    loss: Callable[..., tuple]                  # (params, batch, **kw) -> (loss, metrics)
+    init_cache: Callable[..., Params] | None    # (batch, max_seq, dtype) -> cache
+    decode_step: Callable[..., tuple] | None    # (params, token, cache, pos) -> (logits, cache)
+
+    # ---------------- input specs (dry-run stand-ins) --------------------
+    def shape_plan(self, shape_name: str) -> dict:
+        """Resolve a named shape to this arch's concrete dims."""
+        seq, batch, kind = SHAPES[shape_name]
+        cfg = self.cfg
+        plan = {"kind": kind, "batch": batch, "seq": seq}
+        if cfg.is_encoder_decoder:  # whisper: (enc frames, dec tokens<=cap)
+            plan["enc_len"] = cfg.encoder_seq_len
+            plan["seq"] = min(seq, cfg.max_seq_len or seq)
+        if cfg.frontend == "vision_stub":
+            plan["prefix"] = min(cfg.frontend_tokens, max(seq - 64, 0))
+            plan["text"] = seq - plan["prefix"]
+        return plan
+
+    def input_specs(self, shape_name: str, dtype=jnp.bfloat16) -> Batch:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        ok, why = self.cfg.shape_supported(shape_name)
+        if not ok:
+            raise SkippedShape(why)
+        p = self.shape_plan(shape_name)
+        b, s, kind = p["batch"], p["seq"], p["kind"]
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        cfg = self.cfg
+        if kind in ("train", "prefill"):
+            specs: Batch = {}
+            if cfg.is_encoder_decoder:
+                specs["frames"] = sds((b, p["enc_len"], cfg.d_model), dtype)
+                specs["tokens"] = sds((b, s), i32)
+                if kind == "train":
+                    specs["labels"] = sds((b, s), i32)
+            elif cfg.frontend == "vision_stub":
+                specs["patches"] = sds((b, p["prefix"], cfg.d_model), dtype)
+                specs["tokens"] = sds((b, p["text"]), i32)
+                if kind == "train":
+                    specs["labels"] = sds((b, s), i32)  # full seq, prefix masked
+            else:
+                specs["tokens"] = sds((b, s), i32)
+                if kind == "train":
+                    specs["labels"] = sds((b, s), i32)
+            return specs
+        # decode: one token + cache of length s
+        cache = jax.eval_shape(lambda: self.init_cache(b, s, dtype))
+        return {
+            "token": sds((b,), i32),
+            "cache": cache,
+            "pos": sds((), i32),
+        }
+
+
+class SkippedShape(Exception):
+    """Raised for (arch, shape) cells excluded by DESIGN.md §4."""
+
+
+# ---------------------------------------------------------------------------
+# Family adapters
+# ---------------------------------------------------------------------------
+
+def _lm_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
+    def forward(params, batch, **kw):
+        return T.forward(params, batch["tokens"], cfg,
+                         prefix_embeds=batch.get("patches"), **kw)
+
+    def loss(params, batch, **kw):
+        logits = forward(params, batch, **kw)
+        return cross_entropy(logits, batch["labels"])
+
+    def init_cache(batch, max_seq, dtype=jnp.bfloat16):
+        return T.init_kv_cache(cfg, batch, max_seq, dtype)
+
+    def decode_step(params, token, cache, pos, **kw):
+        return T.decode_step(params, token, cache, pos, cfg, **kw)
+
+    return ModelAPI(arch_id, cfg, lambda key, dtype=jnp.bfloat16: T.init_lm(key, cfg, dtype),
+                    forward, loss, init_cache, decode_step)
+
+
+def _vlm_loss_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
+    base = _lm_api(arch_id, cfg)
+
+    def loss(params, batch, **kw):
+        logits = base.forward(params, batch, **kw)  # (B, P+T, V)
+        return cross_entropy(logits, batch["labels"])
+
+    return ModelAPI(arch_id, cfg, base.init, base.forward, loss,
+                    base.init_cache, base.decode_step)
+
+
+def _whisper_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
+    def init(key, dtype=jnp.bfloat16):
+        return T.init_encdec(key, cfg, dtype)
+
+    def forward(params, batch, **kw):
+        kw.pop("compress_keep", None)
+        return T.encdec_forward(params, batch["frames"], batch["tokens"], cfg, **kw)
+
+    def loss(params, batch, **kw):
+        logits = forward(params, batch, **kw)
+        return cross_entropy(logits, batch["labels"])
+
+    return ModelAPI(arch_id, cfg, init, forward, loss, None, None)
+
+
+def _zamba_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
+    def forward(params, batch, **kw):
+        kw.pop("compress_keep", None)
+        return ssm_lib.zamba_forward(params, batch["tokens"], cfg, **kw)
+
+    def loss(params, batch, **kw):
+        logits = forward(params, batch, **kw)
+        return cross_entropy(logits, batch["labels"])
+
+    def init_cache(batch, max_seq, dtype=jnp.bfloat16):
+        return ssm_lib.init_zamba_cache(cfg, batch, max_seq, dtype)
+
+    def decode_step(params, token, cache, pos, **kw):
+        return ssm_lib.zamba_decode_step(params, token, cache, pos, cfg, **kw)
+
+    return ModelAPI(arch_id, cfg, lambda key, dtype=jnp.bfloat16: ssm_lib.init_zamba(key, cfg, dtype),
+                    forward, loss, init_cache, decode_step)
+
+
+def _rwkv_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
+    def forward(params, batch, **kw):
+        kw.pop("compress_keep", None)
+        return rwkv_lib.rwkv_forward(params, batch["tokens"], cfg, **kw)
+
+    def loss(params, batch, **kw):
+        logits = forward(params, batch, **kw)
+        return cross_entropy(logits, batch["labels"])
+
+    def init_cache(batch, max_seq, dtype=jnp.bfloat16):
+        # attention-free: the recurrent state IS the cache; max_seq is vacuous
+        return rwkv_lib.init_rwkv_cache(cfg, batch, dtype)
+
+    def decode_step(params, token, cache, pos, **kw):
+        return rwkv_lib.rwkv_decode_step(params, token, cache, pos, cfg)
+
+    return ModelAPI(arch_id, cfg, lambda key, dtype=jnp.bfloat16: rwkv_lib.init_rwkv(key, cfg, dtype),
+                    forward, loss, init_cache, decode_step)
+
+
+def build(arch_id: str, cfg: ArchConfig | None = None) -> ModelAPI:
+    arch_id = arch_id.replace("-", "_")
+    cfg = cfg or get_config(arch_id)
+    if cfg.family in ("dense", "moe"):
+        return _lm_api(arch_id, cfg)
+    if cfg.family == "vlm":
+        return _vlm_loss_api(arch_id, cfg)
+    if cfg.family == "audio":
+        return _whisper_api(arch_id, cfg)
+    if cfg.family == "hybrid":
+        return _zamba_api(arch_id, cfg)
+    if cfg.family == "ssm":
+        return _rwkv_api(arch_id, cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def build_reduced(arch_id: str) -> ModelAPI:
+    """Smoke-test sized API of the same family."""
+    return build(arch_id, get_config(arch_id).reduced())

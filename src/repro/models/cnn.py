@@ -1,0 +1,460 @@
+"""Pure-JAX CNNs for the paper-faithful reproduction (paper §VI benchmarks).
+
+Networks: VGG-16-BN, ResNet-50, MobileNet-v1, MobileNet-v2, a YOLO-v3
+(Darknet-53) backbone, and a tiny trainable CNN for the accuracy-loss
+experiment.  Each network exposes the paper's *fusion layer* boundaries
+(conv [+BN] [+act] [+pool] groups); after every fusion layer the interlayer
+feature map may be compressed with a per-layer `CompressionPolicy`, exactly
+where the paper's DCT module sits in the accelerator pipeline (Fig. 6).
+
+Layout: NHWC activations, HWIO weights.  Compression operates per (N, C)
+plane on the (H, W) spatial grid in 8x8 blocks, as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def conv_init(key, kh, kw, cin, cout, depthwise=False):
+    fan_in = kh * kw * (1 if depthwise else cin)
+    std = np.sqrt(2.0 / fan_in)
+    shape = (kh, kw, 1 if depthwise else cin, cout)
+    return {"w": jax.random.normal(key, shape, jnp.float32) * std}
+
+
+def conv(params, x, stride=1, depthwise=False, groups=1):
+    dn = jax.lax.conv_dimension_numbers(x.shape, params["w"].shape, ("NHWC", "HWIO", "NHWC"))
+    feature_group_count = x.shape[-1] if depthwise else groups
+    return jax.lax.conv_general_dilated(
+        x,
+        params["w"],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=dn,
+        feature_group_count=feature_group_count,
+    )
+
+
+def bn_init(key, c):
+    k1, _ = jax.random.split(key)
+    # inference-mode statistics: unit variance, small random mean/gamma jitter
+    return {
+        "gamma": jnp.ones((c,)) + 0.1 * jax.random.normal(k1, (c,)),
+        "beta": jnp.zeros((c,)),
+        "mean": jnp.zeros((c,)),
+        "var": jnp.ones((c,)),
+    }
+
+
+def bn(params, x, eps=1e-5):
+    inv = params["gamma"] / jnp.sqrt(params["var"] + eps)
+    return x * inv + (params["beta"] - params["mean"] * inv)
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def leaky_relu(x, alpha=0.1):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def relu6(x):
+    return jnp.clip(x, 0, 6)
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "SAME"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# --------------------------------------------------------------------------
+# Fusion-layer compression hook (the paper's DCT module insertion point)
+# --------------------------------------------------------------------------
+
+@dataclass
+class CompressionSchedule:
+    """Which fusion layers to compress and at what level (paper §III-B).
+
+    The paper compresses the first `n_layers` fusion layers; `levels` follows
+    its off-line regression: aggressive (0) early, gentle (3) deeper.
+    """
+
+    n_layers: int = 10
+    bits: int = 8
+
+    def policy(self, idx: int) -> compressor.CompressionPolicy | None:
+        if idx >= self.n_layers:
+            return None
+        level = 0 if idx < 2 else (1 if idx < 5 else (2 if idx < 8 else 3))
+        return compressor.CompressionPolicy(level=level, bits=self.bits)
+
+
+class FusionStats:
+    """Per-fusion-layer compression accounting collected during a forward."""
+
+    def __init__(self):
+        self.layers: list[dict[str, Any]] = []
+
+    def record(self, idx, name, orig_bits, comp_bits, shape):
+        self.layers.append(
+            dict(idx=idx, name=name, orig_bits=orig_bits, comp_bits=comp_bits, shape=shape)
+        )
+
+    def ratios(self):
+        return [l["comp_bits"] / l["orig_bits"] for l in self.layers]
+
+    def overall_ratio(self):
+        ob = sum(l["orig_bits"] for l in self.layers)
+        cb = sum(l["comp_bits"] for l in self.layers)
+        return cb / ob if ob else 1.0
+
+
+def fusion_boundary(
+    x: jax.Array,
+    idx: int,
+    name: str,
+    schedule: CompressionSchedule | None,
+    stats: FusionStats | None,
+    value_bits: int = 16,
+) -> jax.Array:
+    """Apply the paper codec at a fusion-layer output. NHWC -> per-channel HW planes."""
+    if schedule is None:
+        return x
+    policy = schedule.policy(idx)
+    if policy is None:
+        if stats is not None:
+            bits = x.size * value_bits
+            stats.record(idx, name, bits, bits, tuple(x.shape))
+        return x
+    planes = jnp.transpose(x, (0, 3, 1, 2))  # (N, C, H, W)
+    c = compressor.compress(planes, policy)
+    if stats is not None:
+        nblocks = c.index.size // 64
+        nnz = jnp.sum(c.index)
+        comp_bits = nblocks * 64 + nnz * policy.bits
+        stats.record(idx, name, x.size * value_bits, comp_bits, tuple(x.shape))
+    y = compressor.decompress(c)
+    return jnp.transpose(y, (0, 2, 3, 1)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# VGG-16-BN
+# --------------------------------------------------------------------------
+
+VGG16_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg16_bn_init(key, num_classes=21, cin=3):
+    params = []
+    c = cin
+    for v in VGG16_CFG:
+        if v == "M":
+            continue
+        key, k1, k2 = jax.random.split(key, 3)
+        params.append({"conv": conv_init(k1, 3, 3, c, v), "bn": bn_init(k2, v)})
+        c = v
+    key, kfc = jax.random.split(key)
+    params.append({"fc": {"w": jax.random.normal(kfc, (c, num_classes)) * 0.01}})
+    return params
+
+
+def vgg16_bn_apply(params, x, schedule=None, stats=None):
+    """Fusion layer = conv+bn+relu (+pool if the next cfg entry is "M") —
+    the paper compresses after the full conv/act/pool group."""
+    i = 0
+    fidx = 0
+    for ci, v in enumerate(VGG16_CFG):
+        if v == "M":
+            continue  # pooling handled by the preceding fusion layer
+        p = params[i]
+        x = relu(bn(p["bn"], conv(p["conv"], x)))
+        i += 1
+        if ci + 1 < len(VGG16_CFG) and VGG16_CFG[ci + 1] == "M":
+            x = maxpool(x)
+        x = fusion_boundary(x, fidx, f"vgg_f{fidx}", schedule, stats)
+        fidx += 1
+    x = avgpool_global(x)
+    return x @ params[-1]["fc"]["w"]
+
+
+# --------------------------------------------------------------------------
+# ResNet-50
+# --------------------------------------------------------------------------
+
+RESNET50_STAGES = [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2), (3, 512, 2048, 2)]
+
+
+def _bottleneck_init(key, cin, mid, cout, downsample):
+    ks = jax.random.split(key, 8)
+    p = {
+        "c1": conv_init(ks[0], 1, 1, cin, mid),
+        "b1": bn_init(ks[1], mid),
+        "c2": conv_init(ks[2], 3, 3, mid, mid),
+        "b2": bn_init(ks[3], mid),
+        "c3": conv_init(ks[4], 1, 1, mid, cout),
+        "b3": bn_init(ks[5], cout),
+    }
+    if downsample:
+        p["cd"] = conv_init(ks[6], 1, 1, cin, cout)
+        p["bd"] = bn_init(ks[7], cout)
+    return p
+
+
+def resnet50_init(key, num_classes=21, cin=3):
+    key, k0, k1 = jax.random.split(key, 3)
+    params = {"stem": {"conv": conv_init(k0, 7, 7, cin, 64), "bn": bn_init(k1, 64)}, "blocks": []}
+    c = 64
+    for (n, mid, cout, stride) in RESNET50_STAGES:
+        for b in range(n):
+            key, kb = jax.random.split(key)
+            params["blocks"].append(
+                {
+                    "p": _bottleneck_init(kb, c, mid, cout, downsample=(c != cout or (b == 0 and stride > 1))),
+                    "stride": stride if b == 0 else 1,
+                }
+            )
+            c = cout
+    key, kfc = jax.random.split(key)
+    params["fc"] = {"w": jax.random.normal(kfc, (c, num_classes)) * 0.01}
+    return params
+
+
+def resnet50_apply(params, x, schedule=None, stats=None):
+    p = params["stem"]
+    x = relu(bn(p["bn"], conv(p["conv"], x, stride=2)))
+    x = maxpool(x, 3, 2)
+    fidx = 0
+    x = fusion_boundary(x, fidx, "stem", schedule, stats)
+    fidx += 1
+    for blk in params["blocks"]:
+        bp, stride = blk["p"], blk["stride"]
+        y = relu(bn(bp["b1"], conv(bp["c1"], x)))
+        y = relu(bn(bp["b2"], conv(bp["c2"], y, stride=stride)))
+        y = bn(bp["b3"], conv(bp["c3"], y))
+        if "cd" in bp:
+            x = bn(bp["bd"], conv(bp["cd"], x, stride=stride))
+        x = relu(x + y)
+        x = fusion_boundary(x, fidx, f"block{fidx}", schedule, stats)
+        fidx += 1
+    return avgpool_global(x) @ params["fc"]["w"]
+
+
+# --------------------------------------------------------------------------
+# MobileNet-v1 / v2
+# --------------------------------------------------------------------------
+
+MBV1_CFG = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2)] + [(512, 1)] * 5 + [(1024, 2), (1024, 1)]
+
+
+def mobilenet_v1_init(key, num_classes=21, cin=3, width=1.0):
+    key, k0, k1 = jax.random.split(key, 3)
+    c = int(32 * width)
+    params = {"stem": {"conv": conv_init(k0, 3, 3, cin, c), "bn": bn_init(k1, c)}, "blocks": []}
+    for (cout, stride) in MBV1_CFG:
+        cout = int(cout * width)
+        ks = jax.random.split(key, 6)
+        key = ks[0]
+        params["blocks"].append(
+            {
+                "dw": conv_init(ks[1], 3, 3, c, c, depthwise=True),
+                "bnd": bn_init(ks[2], c),
+                "pw": conv_init(ks[3], 1, 1, c, cout),
+                "bnp": bn_init(ks[4], cout),
+                "stride": stride,
+            }
+        )
+        c = cout
+    key, kfc = jax.random.split(key)
+    params["fc"] = {"w": jax.random.normal(kfc, (c, num_classes)) * 0.01}
+    return params
+
+
+def mobilenet_v1_apply(params, x, schedule=None, stats=None):
+    p = params["stem"]
+    x = relu(bn(p["bn"], conv(p["conv"], x, stride=2)))
+    fidx = 0
+    x = fusion_boundary(x, fidx, "stem", schedule, stats)
+    fidx += 1
+    for blk in params["blocks"]:
+        x = relu(bn(blk["bnd"], conv(blk["dw"], x, stride=blk["stride"], depthwise=True)))
+        x = relu(bn(blk["bnp"], conv(blk["pw"], x)))
+        x = fusion_boundary(x, fidx, f"dsep{fidx}", schedule, stats)
+        fidx += 1
+    return avgpool_global(x) @ params["fc"]["w"]
+
+
+MBV2_CFG = [
+    # (expansion t, cout, n, stride)
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2_init(key, num_classes=21, cin=3):
+    key, k0, k1 = jax.random.split(key, 3)
+    c = 32
+    params = {"stem": {"conv": conv_init(k0, 3, 3, cin, c), "bn": bn_init(k1, c)}, "blocks": []}
+    for (t, cout, n, stride) in MBV2_CFG:
+        for b in range(n):
+            mid = c * t
+            ks = jax.random.split(key, 8)
+            key = ks[0]
+            blk = {
+                "exp": conv_init(ks[1], 1, 1, c, mid) if t != 1 else None,
+                "bne": bn_init(ks[2], mid) if t != 1 else None,
+                "dw": conv_init(ks[3], 3, 3, mid, mid, depthwise=True),
+                "bnd": bn_init(ks[4], mid),
+                "pw": conv_init(ks[5], 1, 1, mid, cout),
+                "bnp": bn_init(ks[6], cout),
+                "stride": stride if b == 0 else 1,
+                "res": (c == cout),
+            }
+            params["blocks"].append(blk)
+            c = cout
+    key, k2, k3, kfc = jax.random.split(key, 4)
+    params["head"] = {"conv": conv_init(k2, 1, 1, c, 1280), "bn": bn_init(k3, 1280)}
+    params["fc"] = {"w": jax.random.normal(kfc, (1280, num_classes)) * 0.01}
+    return params
+
+
+def mobilenet_v2_apply(params, x, schedule=None, stats=None):
+    p = params["stem"]
+    x = relu6(bn(p["bn"], conv(p["conv"], x, stride=2)))
+    fidx = 0
+    x = fusion_boundary(x, fidx, "stem", schedule, stats)
+    fidx += 1
+    for blk in params["blocks"]:
+        y = x
+        if blk["exp"] is not None:
+            y = relu6(bn(blk["bne"], conv(blk["exp"], y)))
+        y = relu6(bn(blk["bnd"], conv(blk["dw"], y, stride=blk["stride"], depthwise=True)))
+        y = bn(blk["bnp"], conv(blk["pw"], y))  # linear bottleneck: DENSE output
+        x = x + y if (blk["res"] and blk["stride"] == 1) else y
+        x = fusion_boundary(x, fidx, f"ir{fidx}", schedule, stats)
+        fidx += 1
+    x = relu6(bn(params["head"]["bn"], conv(params["head"]["conv"], x)))
+    return avgpool_global(x) @ params["fc"]["w"]
+
+
+# --------------------------------------------------------------------------
+# YOLO-v3 backbone (Darknet-53, leaky-ReLU => dense feature maps)
+# --------------------------------------------------------------------------
+
+DARKNET_STAGES = [(1, 64), (2, 128), (8, 256), (8, 512), (4, 1024)]
+
+
+def darknet53_init(key, cin=3):
+    key, k0, k1 = jax.random.split(key, 3)
+    params = {"stem": {"conv": conv_init(k0, 3, 3, cin, 32), "bn": bn_init(k1, 32)}, "stages": []}
+    c = 32
+    for (n, cout) in DARKNET_STAGES:
+        ks = jax.random.split(key, 3)
+        key = ks[0]
+        stage = {"down": {"conv": conv_init(ks[1], 3, 3, c, cout), "bn": bn_init(ks[2], cout)}, "blocks": []}
+        c = cout
+        for _ in range(n):
+            ks = jax.random.split(key, 5)
+            key = ks[0]
+            stage["blocks"].append(
+                {
+                    "c1": conv_init(ks[1], 1, 1, c, c // 2),
+                    "b1": bn_init(ks[2], c // 2),
+                    "c2": conv_init(ks[3], 3, 3, c // 2, c),
+                    "b2": bn_init(ks[4], c),
+                }
+            )
+        params["stages"].append(stage)
+    return params
+
+
+def darknet53_apply(params, x, schedule=None, stats=None):
+    p = params["stem"]
+    x = leaky_relu(bn(p["bn"], conv(p["conv"], x)))
+    fidx = 0
+    x = fusion_boundary(x, fidx, "stem", schedule, stats)
+    fidx += 1
+    for stage in params["stages"]:
+        d = stage["down"]
+        x = leaky_relu(bn(d["bn"], conv(d["conv"], x, stride=2)))
+        x = fusion_boundary(x, fidx, f"down{fidx}", schedule, stats)
+        fidx += 1
+        for blk in stage["blocks"]:
+            y = leaky_relu(bn(blk["b1"], conv(blk["c1"], x)))
+            y = leaky_relu(bn(blk["b2"], conv(blk["c2"], y)))
+            x = x + y
+            x = fusion_boundary(x, fidx, f"res{fidx}", schedule, stats)
+            fidx += 1
+    return x
+
+
+# --------------------------------------------------------------------------
+# Tiny CNN for the trained accuracy-loss experiment
+# --------------------------------------------------------------------------
+
+def tiny_cnn_init(key, num_classes=4, cin=1, width=16):
+    ks = jax.random.split(key, 8)
+    return {
+        "c1": conv_init(ks[0], 3, 3, cin, width),
+        "b1": bn_init(ks[1], width),
+        "c2": conv_init(ks[2], 3, 3, width, width * 2),
+        "b2": bn_init(ks[3], width * 2),
+        "c3": conv_init(ks[4], 3, 3, width * 2, width * 4),
+        "b3": bn_init(ks[5], width * 4),
+        "fc": {"w": jax.random.normal(ks[6], (width * 4, num_classes)) * 0.01,
+               "b": jnp.zeros((num_classes,))},
+    }
+
+
+def tiny_cnn_apply(params, x, schedule=None, stats=None, train=False):
+    def _bn(p, v):
+        if train:  # batch statistics during training
+            mean = jnp.mean(v, axis=(0, 1, 2))
+            var = jnp.var(v, axis=(0, 1, 2))
+            inv = p["gamma"] / jnp.sqrt(var + 1e-5)
+            return v * inv + (p["beta"] - mean * inv)
+        return bn(p, v)
+
+    x = relu(_bn(params["b1"], conv(params["c1"], x)))
+    x = maxpool(x)
+    x = fusion_boundary(x, 0, "c1", schedule, stats)
+    x = relu(_bn(params["b2"], conv(params["c2"], x)))
+    x = maxpool(x)
+    x = fusion_boundary(x, 1, "c2", schedule, stats)
+    x = relu(_bn(params["b3"], conv(params["c3"], x)))
+    x = fusion_boundary(x, 2, "c3", schedule, stats)
+    return avgpool_global(x) @ params["fc"]["w"] + params["fc"]["b"]
+
+
+MODELS = {
+    "vgg16_bn": (vgg16_bn_init, vgg16_bn_apply),
+    "resnet50": (resnet50_init, resnet50_apply),
+    "mobilenet_v1": (mobilenet_v1_init, mobilenet_v1_apply),
+    "mobilenet_v2": (mobilenet_v2_init, mobilenet_v2_apply),
+    "yolov3_backbone": (darknet53_init, darknet53_apply),
+    "tiny_cnn": (tiny_cnn_init, tiny_cnn_apply),
+}

@@ -1,0 +1,256 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) [arXiv:2404.05892].
+
+Per layer: time-mix (the wkv linear-attention recurrence with per-channel
+data-dependent decay w_t produced by a low-rank MLP of the shifted input) and
+channel-mix (squared-ReLU gated FFN with token shift).
+
+Recurrence per head (state S in R^{N x N}, N = head_dim):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+Train path is chunked: intra-chunk via decay-factored matmuls in log space
+(r~_t = r_t * exp(lw_t), k~_s = k_s * exp(-lw_s); lw clamped >= LOG_W_MIN per
+step so f32 exponents stay bounded — decays this small are off-distribution),
+inter-chunk via a state scan.  Decode path is the exact recurrence.
+
+Simplification vs. the released model (DESIGN.md §4): the data-dependent
+token-shift (ddlerp) LoRA is replaced by static lerp mixes; the data-dependent
+*decay* — the defining RWKV-6 feature — is kept in its LoRA form.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+LOG_W_MIN = -4.0     # per-step clamp on log decay (numerics, see module doc)
+DECAY_LORA = 64
+
+
+def _shift(x):
+    """Token shift: x_{t-1} with zero at t=0. x: (B, S, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def rwkv_layer_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    n = cfg.head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": L.layernorm_init(d, dtype),
+        "ln2": L.layernorm_init(d, dtype),
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": L.dense_init(ks[0], d, d, dtype=dtype),
+        "wk": L.dense_init(ks[1], d, d, dtype=dtype),
+        "wv": L.dense_init(ks[2], d, d, dtype=dtype),
+        "wg": L.dense_init(ks[3], d, d, dtype=dtype),
+        "wo": L.dense_init(ks[4], d, d, dtype=dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "wA": (jax.random.normal(ks[5], (d, DECAY_LORA), jnp.float32) * 0.01).astype(dtype),
+        "wB": (jax.random.normal(ks[6], (DECAY_LORA, d), jnp.float32) * 0.01).astype(dtype),
+        "u": jnp.zeros((h, n), jnp.float32),  # per-channel bonus
+        "ln_x": L.layernorm_init(d, dtype),   # per-head group norm (folded)
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cmix_r": jnp.full((d,), 0.5, dtype),
+        "ck": L.dense_init(ks[7], d, cfg.d_ff, dtype=dtype),
+        "cv": L.dense_init(ks[8], cfg.d_ff, d, dtype=dtype),
+        "cr": L.dense_init(ks[9], d, d, dtype=dtype),
+    }
+
+
+def _decay(p, xw):
+    """log w_t (negative), per channel: (B, S, D) -> f32."""
+    lora = jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), p["wA"].astype(jnp.float32))
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora), p["wB"].astype(jnp.float32))
+    logw = -jnp.exp(p["w0"][None, None, :] + lora)
+    return jnp.maximum(logw, LOG_W_MIN)
+
+
+def _time_mix_projections(p, x, cfg):
+    xs = _shift(x)
+
+    def mix(m):
+        return x * p[m].astype(x.dtype) + xs * (1.0 - p[m].astype(x.dtype))
+
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    r = L.dense(p["wr"], mix("mix_r")).reshape(b, s, h, n)
+    k = L.dense(p["wk"], mix("mix_k")).reshape(b, s, h, n)
+    v = L.dense(p["wv"], mix("mix_v")).reshape(b, s, h, n)
+    g = L.dense(p["wg"], mix("mix_g"))
+    logw = _decay(p, mix("mix_w")).reshape(b, s, h, n)
+    return r, k, v, g, logw
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int):
+    """Chunked wkv: r,k,v (B,S,H,N); logw (B,S,H,N) negative; u (H,N)."""
+    b, s, h, n = r.shape
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    rf = r.astype(jnp.float32).reshape(b, nc, q, h, n)
+    kf = k.astype(jnp.float32).reshape(b, nc, q, h, n)
+    vf = v.astype(jnp.float32).reshape(b, nc, q, h, n)
+    lw = logw.reshape(b, nc, q, h, n)
+    # within-chunk cumulative decay EXCLUSIVE of t: prod_{u<t} w_u
+    lw_cum = jnp.cumsum(lw, axis=2) - lw            # (B,nc,Q,H,N)
+    lw_total = lw_cum[:, :, -1] + lw[:, :, -1]      # full chunk decay (B,nc,H,N)
+
+    r_dec = rf * jnp.exp(lw_cum)                    # r~_t = r_t prod_{u<t} w
+    k_dec = kf * jnp.exp(-(lw_cum + lw))            # k~_s = k_s / prod_{u<=s} w
+    # A[t,s] = sum_n r~[t]k~[s] valid for s < t  (strictly lower triangular)
+    att = jnp.einsum("bcqhn,bckhn->bchqk", r_dec, k_dec)
+    smask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    att = jnp.where(smask[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bchqk,bckhn->bcqhn", att, vf)
+    # diagonal bonus term: r_t (diag(u) k_t^T v_t) = (r_t . u*k_t) v_t
+    diag = jnp.einsum("bcqhn,hn,bcqhn->bcqh", rf, u, kf)
+    y_intra = y_intra + diag[..., None] * vf
+
+    # chunk-local state contribution: sum_s prod_{s<u<=Q} w * k_s^T v_s
+    dec_to_end = jnp.exp(lw_total[:, :, None] - (lw_cum + lw))  # (B,nc,Q,H,N)
+    s_local = jnp.einsum("bcqhn,bcqhm->bchnm", kf * dec_to_end, vf)
+
+    def scan_fn(s_prev, inp):
+        dec, s_loc = inp                            # (B,H,N), (B,H,N,M)
+        s_new = s_prev * jnp.exp(dec)[..., None] + s_loc
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(lw_total, 1, 0), jnp.moveaxis(s_local, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)           # (B,nc,H,N,M)
+    y_inter = jnp.einsum("bcqhn,bchnm->bcqhm", r_dec, s_prevs)
+    return (y_intra + y_inter).reshape(b, s, h, n)
+
+
+def rwkv_time_mix(p, x, cfg):
+    b, s, d = x.shape
+    r, k, v, g, logw = _time_mix_projections(p, x, cfg)
+    y = _wkv_chunked(r, k, v, logw, p["u"], cfg.ssm_chunk)
+    y = y.reshape(b, s, d)
+    y = L.layernorm(p["ln_x"], y.astype(x.dtype))
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return L.dense(p["wo"], y)
+
+
+def rwkv_channel_mix(p, x):
+    xs = _shift(x)
+    xk = x * p["cmix_k"].astype(x.dtype) + xs * (1.0 - p["cmix_k"].astype(x.dtype))
+    xr = x * p["cmix_r"].astype(x.dtype) + xs * (1.0 - p["cmix_r"].astype(x.dtype))
+    k = L.dense(p["ck"], xk)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = L.dense(p["cv"], k)
+    return jax.nn.sigmoid(L.dense(p["cr"], xr).astype(jnp.float32)).astype(x.dtype) * v
+
+
+def rwkv_layer(p, x, cfg):
+    x = x + rwkv_time_mix(p, L.layernorm(p["ln1"], x), cfg)
+    x = x + rwkv_channel_mix(p, L.layernorm(p["ln2"], x))
+    return x
+
+
+def init_rwkv(key, cfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "ln_in": L.layernorm_init(cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: rwkv_layer_init(k, cfg, dtype))(keys),
+        "final_norm": L.layernorm_init(cfg.d_model, dtype),
+        "lm_head": (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size), jnp.float32) / np.sqrt(cfg.d_model)).astype(dtype),
+    }
+
+
+def rwkv_forward(params, tokens, cfg, *, remat: str = "full", **_) -> jax.Array:
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    x = L.layernorm(params["ln_in"], x)
+
+    def body(p, h):
+        return rwkv_layer(p, h, cfg)
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+
+    def step(h, p):
+        return body(p, h), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    h = L.layernorm(params["final_norm"], x)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"], preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode (exact recurrence; state = (S, x_prev_tm, x_prev_cm) per layer)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Params:
+    h, n, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "S": jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+        "x_cm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+    }
+
+
+def rwkv_decode_step(params, token, cache, pos, cfg):
+    x = params["embed"][token].astype(params["embed"].dtype)  # (B, D)
+    x = L.layernorm(params["ln_in"], x[:, None, :])[:, 0]
+    b, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+
+    def layer_step(carry, inp):
+        xx = carry
+        p, S, x_tm, x_cm = inp
+        xn = L.layernorm(p["ln1"], xx[:, None, :])[:, 0]
+
+        def mix(m, prev):
+            return xn * p[m].astype(xn.dtype) + prev * (1.0 - p[m].astype(xn.dtype))
+
+        r = L.dense(p["wr"], mix("mix_r", x_tm)).reshape(b, h, n).astype(jnp.float32)
+        k = L.dense(p["wk"], mix("mix_k", x_tm)).reshape(b, h, n).astype(jnp.float32)
+        v = L.dense(p["wv"], mix("mix_v", x_tm)).reshape(b, h, n).astype(jnp.float32)
+        g = L.dense(p["wg"], mix("mix_g", x_tm))
+        xw = mix("mix_w", x_tm)
+        lora = jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32)) @ p["wB"].astype(jnp.float32)
+        logw = jnp.maximum(-jnp.exp(p["w0"][None] + lora), LOG_W_MIN).reshape(b, h, n)
+        kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+        out = jnp.einsum("bhn,bhnm->bhm", r, S + p["u"][None, :, :, None] * kv)
+        S_new = jnp.exp(logw)[..., None] * S + kv
+        y = out.reshape(b, d).astype(xx.dtype)
+        y = L.layernorm(p["ln_x"], y[:, None, :])[:, 0]
+        y = y * jax.nn.silu(g.astype(jnp.float32)).astype(xx.dtype)
+        xx = xx + L.dense(p["wo"], y[:, None, :])[:, 0]
+        new_x_tm = xn
+
+        xcn = L.layernorm(p["ln2"], xx[:, None, :])[:, 0]
+        xk = xcn * p["cmix_k"].astype(xcn.dtype) + x_cm * (1.0 - p["cmix_k"].astype(xcn.dtype))
+        xr = xcn * p["cmix_r"].astype(xcn.dtype) + x_cm * (1.0 - p["cmix_r"].astype(xcn.dtype))
+        kk = L.dense(p["ck"], xk[:, None, :])
+        kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(xcn.dtype)
+        vv = L.dense(p["cv"], kk)[:, 0]
+        rr = jax.nn.sigmoid(L.dense(p["cr"], xr[:, None, :]).astype(jnp.float32))[:, 0]
+        xx = xx + rr.astype(xcn.dtype) * vv
+        return xx, (S_new, new_x_tm, xcn)
+
+    x, (S_new, xtm_new, xcm_new) = jax.lax.scan(
+        layer_step, x, (params["layers"], cache["S"], cache["x_tm"], cache["x_cm"])
+    )
+    hfin = L.layernorm(params["final_norm"], x[:, None, :])[:, 0]
+    logits = jnp.einsum("bd,dv->bv", hfin, params["lm_head"], preferred_element_type=jnp.float32)
+    return logits, {"S": S_new, "x_tm": xtm_new, "x_cm": xcm_new}

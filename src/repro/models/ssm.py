@@ -1,0 +1,274 @@
+"""Mamba2 (chunked SSD) blocks and the Zamba2 hybrid LM.
+
+Mamba2 block: in_proj -> short depthwise conv over (x, B, C) -> SSD selective
+state space (chunked block-parallel form: intra-chunk quadratic + inter-chunk
+state scan) -> gated RMSNorm -> out_proj.  The chunked form is the
+TPU-friendly algorithm: per chunk of Q tokens the work is dense einsums, and
+only the (H, P, N) state crosses chunk boundaries via lax.scan.
+
+Zamba2: a stack of Mamba2 blocks with ONE shared attention+MLP block applied
+every `attn_every` blocks (weights reused at every application — faithful to
+the paper's parameter sharing; we omit the per-invocation LoRA deltas and the
+concat-with-embedding input, noted in DESIGN.md).  Forward is two nested
+scans: outer over groups, inner over the group's mamba blocks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+CONV_K = 4  # mamba2 depthwise conv kernel width
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def mamba2_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    d_inner, h, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": L.rmsnorm_init(d, dtype),
+        # in_proj -> [z (d_inner), xBC (conv_dim), dt (h)]
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "out_norm": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: xbc (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B, L, N) single group.  Returns y (B, L, H, P).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    xf = x.astype(jnp.float32)
+    la = dt * A[None, None, :]                      # log decay per step (<0)
+    lc = la.reshape(b, nc, q, h)
+    lcs = jnp.cumsum(lc, axis=2)                    # (B, nc, Q, H) within-chunk
+    xc = xf.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = Bm.astype(jnp.float32).reshape(b, nc, q, n)
+    cc = Cm.astype(jnp.float32).reshape(b, nc, q, n)
+
+    # ---- intra-chunk (quadratic in Q) ----
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)      # (B, nc, Q, Q)
+    li = lcs[:, :, :, None, :] - lcs[:, :, None, :, :]  # (B, nc, Q, K, H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # exp() only on masked-in entries: for t < s the exponent is POSITIVE and
+    # can overflow f32 (inf), which the where() discards in the forward but
+    # poisons the backward with inf * 0 = NaN. Clamp first.
+    li_safe = jnp.where(mask[None, None, :, :, None], li, 0.0)
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li_safe), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp", cb, decay, dtc, xc)
+
+    # ---- chunk-local end states ----
+    dec_end = jnp.exp(lcs[:, :, -1:, :] - lcs)      # decay from s to chunk end
+    s_local = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn", dec_end, dtc, bc, xc)
+    chunk_decay = jnp.exp(lcs[:, :, -1, :])         # (B, nc, H)
+
+    # ---- inter-chunk state scan ----
+    def scan_fn(s_prev, inp):
+        dec, s_loc = inp                            # (B, H), (B, H, P, N)
+        s_new = s_prev * dec[..., None, None] + s_loc
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_local, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)           # (B, nc, H, P, N) state before chunk
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(lcs), s_prevs)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y.astype(x.dtype)
+
+
+def mamba2_block(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D)."""
+    d_inner, h, n = _dims(cfg)
+    hdim = cfg.ssm_head_dim
+    res = x
+    xn = L.rmsnorm(p["norm"], x)
+    zxbcdt = L.dense(p["in_proj"], xn)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(*xs.shape[:2], h, hdim)
+    y = _ssd_chunked(xh, dt, A, bm, cm, cfg.ssm_chunk)
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*xs.shape[:2], d_inner)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return res + L.dense(p["out_proj"], y)
+
+
+def mamba2_decode_step(p, x, ssm_state, conv_state, cfg):
+    """Single-token recurrent step.
+
+    x: (B, 1, D); ssm_state (B, H, P, N); conv_state (B, K-1, conv_dim).
+    """
+    d_inner, h, n = _dims(cfg)
+    hdim = cfg.ssm_head_dim
+    res = x
+    xn = L.rmsnorm(p["norm"], x)
+    zxbcdt = L.dense(p["in_proj"], xn)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    # conv over the rolling window
+    win = jnp.concatenate([conv_state, xbc], axis=1)        # (B, K, conv)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None, :].astype(x.dtype)
+    new_conv_state = win[:, 1:, :]
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                              # (B, H)
+    xh = xs[:, 0].reshape(-1, h, hdim).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, bm[:, 0].astype(jnp.float32), xh)
+    new_state = ssm_state * a[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), new_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return res + L.dense(p["out_proj"], y), new_state, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid LM
+# ---------------------------------------------------------------------------
+
+def init_zamba(key, cfg, dtype=jnp.bfloat16) -> Params:
+    from repro.models import transformer as T
+
+    assert cfg.n_layers % cfg.attn_every == 0
+    groups = cfg.n_layers // cfg.attn_every
+    ks = jax.random.split(key, 5)
+    keys = jax.random.split(ks[0], cfg.n_layers).reshape(groups, cfg.attn_every, -1)
+    mamba = jax.vmap(jax.vmap(lambda k: mamba2_init(k, cfg, dtype)))(keys)
+    return {
+        "embed": (jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "mamba": mamba,  # (groups, attn_every, ...)
+        "shared_attn": T.dense_layer_init(ks[2], cfg, dtype),  # ONE shared block
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": (jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_size), jnp.float32) / np.sqrt(cfg.d_model)).astype(dtype),
+    }
+
+
+def zamba_forward(params, tokens, cfg, *, remat: str = "full", **_) -> jax.Array:
+    from repro.models import transformer as T
+
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    shared = params["shared_attn"]
+
+    def mamba_body(p, h):
+        return mamba2_block(p, h, cfg)
+
+    if remat != "none":
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def attn_body(h):
+        positions = jnp.arange(h.shape[1])[None, :]
+        return T.dense_layer(shared, h, positions, cfg)
+
+    if remat != "none":
+        attn_body = jax.checkpoint(attn_body)
+
+    def group_step(h, group_params):
+        def inner(hh, p):
+            return mamba_body(p, hh), None
+
+        h, _ = jax.lax.scan(inner, h, group_params)
+        h = attn_body(h)
+        return h, None
+
+    x, _ = jax.lax.scan(group_step, x, params["mamba"])
+    h = L.rmsnorm(params["final_norm"], x)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"], preferred_element_type=jnp.float32)
+
+
+def init_zamba_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+    d_inner, h, n = _dims(cfg)
+    groups = cfg.n_layers // cfg.attn_every
+    conv_dim = d_inner + 2 * n
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((groups, cfg.attn_every, batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((groups, cfg.attn_every, batch, CONV_K - 1, conv_dim), dtype),
+        "k": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def zamba_decode_step(params, token, cache, pos, cfg, *, kv_block: int = 1024, unroll: bool = False):
+    from repro.models import transformer as T
+
+    x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
+    shared = params["shared_attn"]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+
+    def group_step(carry, inp):
+        h = carry
+        gp, ssm_g, conv_g, k_g, v_g = inp
+
+        def inner(hh, blk):
+            p, s, c = blk
+            out, s2, c2 = mamba2_decode_step(p, hh, s, c, cfg)
+            return out, (s2, c2)
+
+        h, (ssm2, conv2) = jax.lax.scan(inner, h, (gp, ssm_g, conv_g))
+        # shared attention block against this group's KV cache
+        hn = L.rmsnorm(shared["ln1"], h)
+        k_new, v_new = L.gqa_project_kv(shared["attn"], hn, positions, cfg)
+        k2 = jax.lax.dynamic_update_slice(k_g, k_new.astype(k_g.dtype), (0, pos, 0, 0))
+        v2 = jax.lax.dynamic_update_slice(v_g, v_new.astype(v_g.dtype), (0, pos, 0, 0))
+        hd = cfg.resolved_head_dim
+        q = L.dense(shared["attn"]["wq"], hn).reshape(-1, 1, cfg.n_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        out_h = L.decode_attention(q, k2, v2, pos)  # single-shot decode attn
+        h = h + L.dense(shared["attn"]["wo"], out_h.reshape(-1, 1, cfg.n_heads * hd))
+        h = h + L.mlp(shared["mlp"], L.rmsnorm(shared["ln2"], h), cfg)
+        return h, (ssm2, conv2, k2, v2)
+
+    ngroups = cache["k"].shape[0]
+    x, (ssm_new, conv_new, k_new, v_new) = jax.lax.scan(
+        group_step, x,
+        (params["mamba"], cache["ssm"], cache["conv"], cache["k"], cache["v"]),
+        unroll=ngroups if unroll else 1,
+    )
+    h = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"], preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"ssm": ssm_new, "conv": conv_new, "k": k_new, "v": v_new}

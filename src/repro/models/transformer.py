@@ -1,0 +1,461 @@
+"""Decoder-only LM and encoder-decoder transformer (scan-over-layers).
+
+Families covered: dense (yi, qwen2, nemotron, command-r+), moe (deepseek-v2,
+moonshot), vlm (llava backbone + vision-stub prefix), audio (whisper enc-dec
++ audio-stub frame embeddings).  zamba2/rwkv live in ssm.py / rwkv.py.
+
+Remat policies (train):
+  "none"       — save everything XLA wants
+  "full"       — jax.checkpoint per layer (save residual stream only)
+  "compressed" — ActCompress (core/activation.py): residuals saved in
+                 DCT-truncated int8 — the paper's interlayer compression
+                 applied to the saved-for-backward activations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activation import compressed_checkpoint
+from repro.models import layers as L
+from repro.parallel.sharding import logical as shard_hint
+
+Params = dict[str, Any]
+
+
+def _stacked_init(key, n: int, init_fn):
+    """vmap an init over a leading layer axis for lax.scan consumption."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, x, positions, cfg, **kw):
+    if cfg.attn_type == "mla":
+        return L.mla_attention(p, x, positions, cfg, **kw)
+    return L.gqa_attention(p, x, positions, cfg, **kw)
+
+
+def _attn_init(key, cfg, dtype):
+    if cfg.attn_type == "mla":
+        return L.mla_init(key, cfg, dtype)
+    return L.gqa_init(key, cfg, dtype)
+
+
+def _norm(cfg):
+    return L.layernorm if cfg.norm == "layernorm" else L.rmsnorm
+
+
+def _norm_init(cfg, d, dtype):
+    return L.layernorm_init(d, dtype) if cfg.norm == "layernorm" else L.rmsnorm_init(d, dtype)
+
+
+def dense_layer_init(key, cfg, dtype=jnp.bfloat16, d_ff=None):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": _norm_init(cfg, cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln2": _norm_init(cfg, cfg.d_model, dtype),
+        "mlp": L.mlp_init(k2, cfg, d_ff=d_ff, dtype=dtype),
+    }
+
+
+def moe_layer_init(key, cfg, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_init(cfg, cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln2": _norm_init(cfg, cfg.d_model, dtype),
+        "moe": L.moe_init(k2, cfg, dtype),
+    }
+
+
+def dense_layer(p, x, positions, cfg):
+    norm = _norm(cfg)
+    x = x + _attn_block(p["attn"], norm(p["ln1"], x), positions, cfg)
+    x = x + L.mlp(p["mlp"], norm(p["ln2"], x), cfg)
+    return x
+
+
+def moe_layer(p, x, positions, cfg):
+    norm = _norm(cfg)
+    x = x + _attn_block(p["attn"], norm(p["ln1"], x), positions, cfg)
+    x = x + L.moe_ffn(p["moe"], norm(p["ln2"], x), cfg)
+    return x
+
+
+def _wrap_remat(body, remat: str, compress_keep: int = 4):
+    # both remat modes route through the custom_vjp wrapper so the per-layer
+    # param cotangents are cast to bf16 BEFORE XLA's in-loop DP reduction
+    # (halves gradient wire; accumulation stays f32 in the train step)
+    if remat == "full":
+        return compressed_checkpoint(body, keep=None, grad_dtype=jnp.bfloat16)
+    if remat == "compressed":
+        return compressed_checkpoint(body, keep=compress_keep,
+                                     grad_dtype=jnp.bfloat16)
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 6)
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        nk = cfg.first_k_dense
+        if nk:
+            params["dense_layers"] = _stacked_init(
+                ks[1], nk, lambda k: dense_layer_init(k, cfg, dtype)
+            )
+        params["moe_layers"] = _stacked_init(
+            ks[2], cfg.n_layers - nk, lambda k: moe_layer_init(k, cfg, dtype)
+        )
+    else:
+        params["layers"] = _stacked_init(
+            ks[1], cfg.n_layers, lambda k: dense_layer_init(k, cfg, dtype)
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        ).astype(dtype)
+    return params
+
+
+def embed_tokens(params, tokens, cfg, prefix_embeds=None):
+    x = params["embed"][tokens].astype(params["embed"].dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return shard_hint(x, "batch", None, None)
+
+
+def unembed(params, x, cfg):
+    h = _norm(cfg)(params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+    return shard_hint(logits, "batch", None, "model")
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,                  # (B, S) int32
+    cfg,
+    *,
+    prefix_embeds: jax.Array | None = None,  # (B, P, D) modality stub
+    remat: str = "full",
+    compress_keep: int = 4,
+) -> jax.Array:
+    """Training/prefill forward -> logits (B, S_total, V)."""
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+
+    def scan_layers(stacked, x, body):
+        # positions derived from h inside the body: the remat wrappers
+        # (custom_vjp in particular) must not close over tracers.
+        def layer_body(p, h):
+            h = shard_hint(h, "batch", None, None)  # residual stream layout
+            positions = jnp.arange(h.shape[1])[None, :]
+            return body(p, h, positions, cfg)
+
+        wrapped = _wrap_remat(layer_body, remat, compress_keep)
+
+        def step(h, p):
+            return wrapped(p, h), None
+
+        x, _ = jax.lax.scan(step, x, stacked)
+        return x
+
+    if cfg.family == "moe":
+        if "dense_layers" in params:
+            x = scan_layers(params["dense_layers"], x, dense_layer)
+        x = scan_layers(params["moe_layers"], x, moe_layer)
+    else:
+        x = scan_layers(params["layers"], x, dense_layer)
+    return unembed(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,       # (B, S) prompt (right-padded; pad_mask optional)
+    cfg,
+    max_seq: int,
+    *,
+    prefix_embeds: jax.Array | None = None,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    """Full-prompt forward that also fills a KV cache of size max_seq.
+
+    Returns (logits (B, S_total, V), cache with entries [0, S_total) written).
+    """
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    b, s_total, _ = x.shape
+    norm = _norm(cfg)
+    positions = jnp.arange(s_total)[None, :]
+    pad = max_seq - s_total
+    assert pad >= 0, (max_seq, s_total)
+
+    def layer_body(h, p):
+        hn = norm(p["ln1"], h)
+        if cfg.attn_type == "mla":
+            c_kv, k_rope = L.mla_latent(p["attn"], hn, positions, cfg)
+            attn_out = L.mla_attention(
+                p["attn"], hn, positions, cfg, c_kv=c_kv, k_rope=k_rope
+            )
+            entry = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).astype(cache_dtype),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(cache_dtype),
+            }
+        else:
+            k, v = L.gqa_project_kv(p["attn"], hn, positions, cfg)
+            attn_out = L.gqa_attention(p["attn"], hn, positions, cfg, k=k, v=v)
+            entry = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype),
+            }
+        h = h + attn_out
+        if "moe" in p:
+            h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg)
+        else:
+            h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+        return h, entry
+
+    def run_stack(x, stacked):
+        return jax.lax.scan(layer_body, x, stacked)
+
+    if cfg.family == "moe":
+        caches = []
+        nk = cfg.first_k_dense
+        if nk:
+            x, cache_d = run_stack(x, params["dense_layers"])
+            caches.append(cache_d)
+        x, cache_m = run_stack(x, params["moe_layers"])
+        caches.append(cache_m)
+        cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *caches) \
+            if len(caches) > 1 else caches[0]
+    else:
+        x, cache = run_stack(x, params["layers"])
+    return unembed(params, x, cfg), cache
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
+    """Stacked raw cache (the baseline; compressed cache lives in core/kv_cache)."""
+    hd = cfg.resolved_head_dim
+    if cfg.attn_type == "mla":
+        return {
+            "c_kv": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,        # (B,) int32 — current token
+    cache: Params,
+    pos: jax.Array,          # scalar int32 — write position (same for batch)
+    cfg,
+    *,
+    kv_block: int = 1024,
+    unroll: bool = False,
+) -> tuple[jax.Array, Params]:
+    """One-token decode against a raw KV cache. Returns (logits (B, V), cache).
+
+    unroll=True unrolls the layer loop: cache xs/ys indices become STATIC, so
+    XLA emits true in-place per-layer updates instead of the masked-select
+    full-cache rewrite a dynamic layer index forces (§Perf, decode cells).
+    """
+    x = params["embed"][token][:, None, :].astype(params["embed"].dtype)  # (B, 1, D)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    norm = _norm(cfg)
+
+    def layer_step(carry, inp):
+        h = carry
+        p, cache_slice = inp["p"], inp["cache"]
+        hn = norm(p["ln1"], h)
+        b = hn.shape[0]
+        hd = cfg.resolved_head_dim
+        if cfg.attn_type == "mla":
+            c_kv_new, k_rope_new = L.mla_latent(p["attn"], hn, positions, cfg)
+            c_kv = jax.lax.dynamic_update_slice(
+                cache_slice["c_kv"], c_kv_new.astype(cache_slice["c_kv"].dtype), (0, pos, 0)
+            )
+            k_rope = jax.lax.dynamic_update_slice(
+                cache_slice["k_rope"], k_rope_new.astype(cache_slice["k_rope"].dtype), (0, pos, 0)
+            )
+            # weight-absorbed latent-space attention (no per-step KV up-proj)
+            attn_out = L.mla_decode_attention(
+                p["attn"], hn, positions, cfg, c_kv, k_rope, pos
+            )
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
+            k = jax.lax.dynamic_update_slice(
+                cache_slice["k"], k_new.astype(cache_slice["k"].dtype), (0, pos, 0, 0)
+            )
+            v = jax.lax.dynamic_update_slice(
+                cache_slice["v"], v_new.astype(cache_slice["v"].dtype), (0, pos, 0, 0)
+            )
+            q = L.dense(p["attn"]["wq"], hn).reshape(b, 1, cfg.n_heads, hd)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            out_h = L.decode_attention(q, k, v, pos)  # single-shot (no chunk scan)
+            attn_out = L.dense(p["attn"]["wo"], out_h.reshape(b, 1, cfg.n_heads * hd))
+            new_cache = {"k": k, "v": v}
+        h = h + attn_out
+        if "moe" in p:
+            h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
+        else:
+            h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+        return h, new_cache
+
+    # scan over the layer stack(s)
+    def run_stack(x, stacked_params, cache_stack):
+        def step(h, inp):
+            return layer_step(h, inp)
+
+        nl = jax.tree.leaves(cache_stack)[0].shape[0]
+        x, new_cache = jax.lax.scan(
+            step, x, {"p": stacked_params, "cache": cache_stack},
+            unroll=nl if unroll else 1,
+        )
+        return x, new_cache
+
+    if cfg.family == "moe":
+        nk = cfg.first_k_dense
+        new_cache_parts = {}
+        if nk:
+            cache_d = jax.tree.map(lambda c: c[:nk], cache)
+            x, nc_d = run_stack(x, params["dense_layers"], cache_d)
+            new_cache_parts["dense"] = nc_d
+        cache_m = jax.tree.map(lambda c: c[nk:], cache)
+        x, nc_m = run_stack(x, params["moe_layers"], cache_m)
+        if nk:
+            new_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                new_cache_parts["dense"], nc_m,
+            )
+        else:
+            new_cache = nc_m
+    else:
+        x, new_cache = run_stack(x, params["layers"], cache)
+
+    logits = unembed(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encdec_layer_init_enc(key, cfg, dtype=jnp.bfloat16):
+    return dense_layer_init(key, cfg, dtype)
+
+
+def encdec_layer_init_dec(key, cfg, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = dense_layer_init(k1, cfg, dtype)
+    p["ln_x"] = _norm_init(cfg, cfg.d_model, dtype)
+    p["xattn"] = L.gqa_init(k2, cfg, dtype)
+    return p
+
+
+def init_encdec(key, cfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "pos_embed_dec": (jax.random.normal(ks[1], (cfg.max_seq_len or 448, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "enc_layers": _stacked_init(ks[2], cfg.n_encoder_layers, lambda k: encdec_layer_init_enc(k, cfg, dtype)),
+        "dec_layers": _stacked_init(ks[3], cfg.n_layers, lambda k: encdec_layer_init_dec(k, cfg, dtype)),
+        "enc_norm": _norm_init(cfg, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+    }
+
+
+def encode_audio(params, frames, cfg, *, remat="full"):
+    """frames: (B, T, D) precomputed frame embeddings (conv frontend stub)."""
+    norm = _norm(cfg)
+    x = frames
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(p, h):
+        hn = norm(p["ln1"], h)
+        b, s, _ = hn.shape
+        hd = cfg.resolved_head_dim
+        q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
+        k = L.dense(p["attn"]["wk"], hn).reshape(b, s, cfg.n_kv_heads, hd)
+        v = L.dense(p["attn"]["wv"], hn).reshape(b, s, cfg.n_kv_heads, hd)
+        # whisper encoder: no rope (learned/sinusoidal pos handled upstream), non-causal
+        o = L.chunked_attention(q, k, v, causal=False)
+        h = h + L.dense(p["attn"]["wo"], o.reshape(b, s, -1))
+        h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+        return h
+
+    wrapped = _wrap_remat(body, remat)
+
+    def step(h, p):
+        return wrapped(p, h), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return norm(params["enc_norm"], x)
+
+
+def decode_text(params, tokens, enc_out, cfg, *, remat="full"):
+    """Teacher-forced decoder -> logits (train/prefill path)."""
+    norm = _norm(cfg)
+    x = params["embed"][tokens].astype(enc_out.dtype)
+    s = x.shape[1]
+    x = x + params["pos_embed_dec"][:s][None]
+    positions = jnp.arange(s)[None, :]
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+
+    def body(p_and_enc, h):
+        # enc_out rides as an explicit input: the remat wrapper is a
+        # custom_vjp, which cannot differentiate closed-over tracers
+        p, enc = p_and_enc
+        hn = norm(p["ln1"], h)
+        q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
+        k = L.dense(p["attn"]["wk"], hn).reshape(b, s, cfg.n_kv_heads, hd)
+        v = L.dense(p["attn"]["wv"], hn).reshape(b, s, cfg.n_kv_heads, hd)
+        o = L.chunked_attention(q, k, v, causal=True)
+        h = h + L.dense(p["attn"]["wo"], o.reshape(b, s, -1))
+        # cross attention over encoder output
+        hx = norm(p["ln_x"], h)
+        qx = L.dense(p["xattn"]["wq"], hx).reshape(b, s, cfg.n_heads, hd)
+        kx = L.dense(p["xattn"]["wk"], enc).reshape(b, enc.shape[1], cfg.n_kv_heads, hd)
+        vx = L.dense(p["xattn"]["wv"], enc).reshape(b, enc.shape[1], cfg.n_kv_heads, hd)
+        ox = L.chunked_attention(qx, kx, vx, causal=False)
+        h = h + L.dense(p["xattn"]["wo"], ox.reshape(b, s, -1))
+        h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+        return h
+
+    wrapped = _wrap_remat(body, remat)
+
+    def step(h, p):
+        return wrapped((p, enc_out), h), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    h = norm(params["final_norm"], x)
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"], preferred_element_type=jnp.float32)
+
+
+def encdec_forward(params, frames, tokens, cfg, *, remat="full", **_):
+    enc = encode_audio(params, frames, cfg, remat=remat)
+    return decode_text(params, tokens, enc, cfg, remat=remat)

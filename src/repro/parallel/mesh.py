@@ -1,0 +1,61 @@
+"""Mesh construction and axis conventions.
+
+Axes:
+  pod   — slow DCN/ICI-bridge axis between pods. Pure data parallelism;
+          crossing it is expensive (GradCompress targets exactly this axis).
+  data  — intra-pod data parallelism (batch sharding) + ZeRO-1 optimizer
+          state sharding. For long_500k decode it doubles as the sequence axis.
+  model — tensor/expert parallelism: attention heads, FFN columns, MoE experts,
+          vocab.
+
+Production meshes (assignment): 16x16 = 256 chips single pod;
+(2, 16, 16) = 512 chips across 2 pods.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Batch axes: everything data-parallel (pod is DP too, just over slow links).
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """A mesh over whatever devices exist (tests / single-host examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec entry for a global-batch dimension on this mesh."""
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    if not axes:
+        return P(None)
+    return P(axes)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in BATCH_AXES:
+        n *= mesh_axis_size(mesh, a)
+    return n
+
+
+def shard(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

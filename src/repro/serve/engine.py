@@ -1,0 +1,283 @@
+"""Serving engine: batched prefill + decode with raw or DCT-compressed KV.
+
+Layers:
+  * `make_prefill` / `make_decode` — jit-able pure step functions (these are
+    what the multi-pod dry-run lowers for the decode_* shapes).
+  * `decode_step_compressed` — the KVCompress decode path: per layer the new
+    token's K/V goes into an 8-token raw tail; full blocks are flushed to the
+    int8 DCT store; attention streams the compressed store (core/kv_cache.py).
+  * `Engine` — static-batch request server: admits up to `batch` requests,
+    prefills the batch, decodes until every slot hits EOS/max_new, retires.
+
+MLA (deepseek-v2) keeps its raw latent cache: the latent IS a learned
+compression (kv_lora 512 vs 2*128*128 per token = 64x); stacking a fixed DCT
+basis on top of it measurably hurts (DESIGN.md §4) — `compressed=True` falls
+back to raw for MLA and logs the fact.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_cache as kvc
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.api import ModelAPI
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Compressed-cache decode (GQA families)
+# ---------------------------------------------------------------------------
+
+def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
+                          dtype=jnp.bfloat16):
+    return kvc.init_compressed_cache(cfg, batch, max_seq, keep=keep, dtype=dtype)
+
+
+def decode_step_compressed(
+    params: Params,
+    token: jax.Array,       # (B,)
+    cache: kvc.CompressedKVCache,
+    pos: jax.Array,         # scalar
+    cfg,
+    *,
+    kv_block: int = 1024,
+) -> tuple[jax.Array, kvc.CompressedKVCache]:
+    """One-token decode against the DCT-compressed KV store."""
+    assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
+    keep = cache.keep
+    x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    norm = T._norm(cfg)
+    hd = cfg.resolved_head_dim
+
+    def layer_step(h, inp):
+        p, lc = inp["p"], inp["cache"]
+        hn = norm(p["ln1"], h)
+        b, s, _ = hn.shape
+        q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
+        lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep)
+        attn = kvc.attend_compressed(q, lc2, pos, keep, kv_block=kv_block)
+        h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
+        if "moe" in p:
+            h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
+        else:
+            h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+        return h, lc2
+
+    cache_tree = {
+        "packed_k": cache.packed_k, "scale_k": cache.scale_k,
+        "packed_v": cache.packed_v, "scale_v": cache.scale_v,
+        "tail_k": cache.tail_k, "tail_v": cache.tail_v,
+    }
+
+    def run(x, stacked, ct):
+        return jax.lax.scan(layer_step, x, {"p": stacked, "cache": ct})
+
+    if cfg.family == "moe":
+        nk = cfg.first_k_dense
+        parts = []
+        if nk:
+            ct_d = jax.tree.map(lambda c: c[:nk], cache_tree)
+            x, nc_d = run(x, params["dense_layers"], ct_d)
+            parts.append(nc_d)
+        ct_m = jax.tree.map(lambda c: c[nk:], cache_tree)
+        x, nc_m = run(x, params["moe_layers"], ct_m)
+        parts.append(nc_m)
+        new_tree = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts) \
+            if len(parts) > 1 else parts[0]
+    else:
+        x, new_tree = run(x, params["layers"], cache_tree)
+
+    logits = T.unembed(params, x, cfg)[:, 0]
+    new_cache = kvc.CompressedKVCache(
+        new_tree["packed_k"], new_tree["scale_k"],
+        new_tree["packed_v"], new_tree["scale_v"],
+        new_tree["tail_k"], new_tree["tail_v"], keep,
+    )
+    return logits, new_cache
+
+
+def prefill_compressed(
+    params: Params,
+    tokens: jax.Array,
+    cfg,
+    max_seq: int,
+    keep: int = 4,
+    *,
+    dtype=jnp.bfloat16,
+) -> tuple[jax.Array, kvc.CompressedKVCache]:
+    """Prefill into the compressed store: raw prefill then bulk-compress.
+
+    Prompt K/V of all full 8-token blocks is DCT-packed; the remainder
+    (< 8 tokens) lands in the raw tail.
+    """
+    assert cfg.attn_type == "gqa"
+    logits, raw = T.prefill(params, tokens, cfg, max_seq, cache_dtype=jnp.float32)
+    s = tokens.shape[1]
+    s_full = (s // kvc.BLOCK) * kvc.BLOCK
+    comp = jax.vmap(lambda k, v: kvc.prefill_compress(k, v, keep))(
+        raw["k"], raw["v"]
+    )  # vmap over layers
+    # tail: the trailing partial block (positions s_full .. s)
+    tail_src_k = jax.lax.dynamic_slice_in_dim(raw["k"], s_full, kvc.BLOCK, 2) \
+        if s_full + kvc.BLOCK <= raw["k"].shape[2] else raw["k"][:, :, -kvc.BLOCK:]
+    tail_src_v = jax.lax.dynamic_slice_in_dim(raw["v"], s_full, kvc.BLOCK, 2) \
+        if s_full + kvc.BLOCK <= raw["v"].shape[2] else raw["v"][:, :, -kvc.BLOCK:]
+    cache = kvc.CompressedKVCache(
+        packed_k=comp["packed_k"], scale_k=comp["scale_k"],
+        packed_v=comp["packed_v"], scale_v=comp["scale_v"],
+        tail_k=tail_src_k.astype(dtype), tail_v=tail_src_v.astype(dtype),
+        keep=keep,
+    )
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 2048
+    max_new_tokens: int = 64
+    kv_compress: bool = False
+    kv_keep: int = 4
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: int = -1             # -1 => never stops early
+    kv_block: int = 1024
+
+
+def make_steps(api: ModelAPI, sc: ServeConfig):
+    """(prefill_fn, decode_fn, cache_init). jit left to the caller/Engine."""
+    cfg = api.cfg
+    use_comp = sc.kv_compress and cfg.attn_type == "gqa" and \
+        cfg.resolved_head_dim % 8 == 0 and cfg.family in ("dense", "moe", "vlm")
+
+    if use_comp:
+        def prefill_fn(params, tokens):
+            return prefill_compressed(params, tokens, cfg, sc.max_seq, sc.kv_keep)
+
+        def decode_fn(params, token, cache, pos):
+            return decode_step_compressed(params, token, cache, pos, cfg,
+                                          kv_block=sc.kv_block)
+
+        cache_init = lambda b: kvc.init_compressed_cache(cfg, b, sc.max_seq, sc.kv_keep)
+        return prefill_fn, decode_fn, cache_init
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def prefill_fn(params, tokens):
+            return T.prefill(params, tokens, cfg, sc.max_seq)
+
+        def decode_fn(params, token, cache, pos):
+            return T.decode_step(params, token, cache, pos, cfg, kv_block=sc.kv_block)
+
+        cache_init = lambda b: api.init_cache(b, sc.max_seq)
+        return prefill_fn, decode_fn, cache_init
+
+    # recurrent families: prefill = teacher-forced decode of the prompt
+    def prefill_fn(params, tokens):
+        b, s = tokens.shape
+        # cache activations must match the params' compute dtype
+        cache = api.init_cache(b, sc.max_seq, dtype=params["embed"].dtype)
+
+        def body(carry, t):
+            cache = carry
+            logits, cache = api.decode_step(params, tokens[:, t], cache, t)
+            return cache, logits
+
+        cache, logits_seq = jax.lax.scan(body, cache, jnp.arange(s))
+        return jnp.moveaxis(logits_seq, 0, 1), cache  # (B, S, V)
+
+    def decode_fn(params, token, cache, pos):
+        return api.decode_step(params, token, cache, pos)
+
+    cache_init = lambda b: api.init_cache(b, sc.max_seq)
+    return prefill_fn, decode_fn, cache_init
+
+
+# ---------------------------------------------------------------------------
+# Static-batch engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Admit up to `batch` requests, prefill once, decode lock-step.
+
+    Prompts are right-aligned to a common length (left-padded with 0; the
+    causal mask plus identical lengths keep semantics exact for the batch).
+    Sampling: greedy or temperature softmax with a fixed seed per engine.
+    """
+
+    def __init__(self, api: ModelAPI, params: Params, sc: ServeConfig, batch: int,
+                 seed: int = 0):
+        self.api = api
+        self.params = params
+        self.sc = sc
+        self.batch = batch
+        self.rng = jax.random.PRNGKey(seed)
+        prefill_fn, decode_fn, cache_init = make_steps(api, sc)
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self.stats = {"requests": 0, "tokens_out": 0, "steps": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        assert len(requests) <= self.batch
+        while len(requests) < self.batch:  # pad batch with a dummy slot
+            requests.append(Request(uid=-1, prompt=np.zeros(8, np.int32), max_new=1))
+        plen = max(len(r.prompt) for r in requests)
+        plen = max(8, plen)
+        prompts = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # right-align
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        token = self._sample(logits[:, -1])
+        max_new = max(r.max_new for r in requests)
+        done = np.zeros(self.batch, bool)
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if r.uid >= 0 and not r.done:
+                    tok = int(token[i])
+                    r.out_tokens.append(tok)
+                    if tok == self.sc.eos_id or len(r.out_tokens) >= r.max_new:
+                        r.done = True
+                done[i] = r.done or r.uid < 0
+            self.stats["tokens_out"] += int((~done).sum()) + int(done.sum() * 0)
+            if done.all():
+                break
+            pos = jnp.int32(plen + step)
+            logits_step, cache = self._decode(self.params, token, cache, pos)
+            token = self._sample(logits_step)
+            self.stats["steps"] += 1
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["requests"] += sum(1 for r in requests if r.uid >= 0)
+        return [r for r in requests if r.uid >= 0]

@@ -1,0 +1,14 @@
+"""Shared pytest config.
+
+Guard: tests must not leak jax_enable_x64 into the process (it breaks conv
+dtype matching in every other module). The dry-run's 512-device flag is also
+deliberately NOT set here — smoke tests run on the single real CPU device.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _no_x64_leak():
+    assert not jax.config.jax_enable_x64, "a test leaked jax_enable_x64=True"
+    yield

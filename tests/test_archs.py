@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: reduced config of each family, one forward +
+loss + (where defined) decode step on CPU. Output shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, registry
+from repro.models import api as model_api
+
+B, S = 2, 32
+
+
+def _batch(api, key=0):
+    cfg = api.cfg
+    rng = np.random.default_rng(key)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks)}
+    labels = np.roll(toks, -1, axis=1)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq_len or 16, cfg.d_model)), jnp.bfloat16
+        )
+        batch["labels"] = jnp.asarray(labels)
+    elif cfg.frontend == "vision_stub":
+        pf = 16
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((B, pf, cfg.d_model)), jnp.bfloat16
+        )
+        batch["labels"] = jnp.asarray(
+            np.concatenate([np.full((B, pf), -1, np.int32), labels], axis=1)
+        )
+    else:
+        batch["labels"] = jnp.asarray(labels)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_api(request):
+    api = model_api.build_reduced(request.param)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params
+
+
+def test_forward_and_loss(arch_api):
+    api, params = arch_api
+    batch = _batch(api)
+    logits = api.forward(params, batch)
+    v = api.cfg.vocab_size
+    assert logits.shape[0] == B and logits.shape[-1] == v
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = api.loss(params, batch)
+    assert jnp.isfinite(loss) and float(loss) > 0.0
+    # loss should be near log(vocab) at random init
+    assert float(loss) < 2.5 * np.log(v)
+
+
+def test_grads_finite(arch_api):
+    api, params = arch_api
+    batch = _batch(api)
+    g = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    finite = jax.tree.map(lambda x: bool(jnp.all(jnp.isfinite(x))), g)
+    assert all(jax.tree.leaves(finite))
+
+
+def test_decode_matches_forward(arch_api):
+    """Greedy next-token logits from decode_step == teacher-forced forward.
+
+    MoE archs run in f32: in bf16 the router's top-k can legitimately flip on
+    near-tie logits between batched and single-token shapes (rounding), which
+    is expected MoE behaviour, not a decode bug — f32 parity is the invariant.
+    """
+    api, params = arch_api
+    if api.decode_step is None:
+        pytest.skip("encoder-decoder: decode covered by whisper-specific test")
+    cfg = api.cfg
+    if cfg.family == "moe":
+        # f32 + dropless forward: capacity drops in the batched forward are
+        # legitimate MoE behaviour but break exact parity with dropless decode
+        import dataclasses
+        api = model_api.build(api.arch_id, dataclasses.replace(cfg, moe_dropless=True))
+        params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        cache = api.init_cache(B, 32, dtype=jnp.float32)
+        atol = 1e-3
+    else:
+        cache = api.init_cache(B, 32)
+        atol = 0.15
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 16)).astype(np.int32))
+    full = api.forward(params, {"tokens": toks}, remat="none")  # (B, 16, V)
+    logits = None
+    for t in range(16):
+        logits, cache = api.decode_step(params, toks[:, t], cache, jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full[:, -1], np.float32),
+        atol=atol, rtol=0.05,
+    )
+
+
+def test_all_shapes_have_plan():
+    """Every (arch, shape) cell either yields input specs or a documented skip."""
+    n_ok, n_skip = 0, 0
+    for arch_id in ARCH_IDS:
+        api = model_api.build(arch_id)
+        for shape in SHAPES:
+            ok, why = api.cfg.shape_supported(shape)
+            if not ok:
+                assert why, f"{arch_id}/{shape} skipped without a reason"
+                n_skip += 1
+                continue
+            specs = api.input_specs(shape)
+            assert all(
+                isinstance(s, jax.ShapeDtypeStruct)
+                for s in jax.tree.leaves(specs)
+            )
+            n_ok += 1
+    assert n_ok + n_skip == len(ARCH_IDS) * len(SHAPES) == 40
+    assert n_skip == 9  # 8x long_500k (full attention) + whisper decode_32k
+
+
+def test_param_counts_sane():
+    """Analytic parameter totals are within tolerance of the advertised size."""
+    expected = {
+        "deepseek_v2_236b": 236e9,
+        "moonshot_v1_16b_a3b": 16e9,
+        "nemotron_4_340b": 340e9,
+        "yi_6b": 6e9,
+        "qwen2_0_5b": 0.5e9,
+        "command_r_plus_104b": 104e9,
+        "llava_next_mistral_7b": 7e9,
+        "zamba2_2_7b": 2.7e9,
+        "rwkv6_1_6b": 1.6e9,
+    }
+    for arch_id, target in expected.items():
+        total = get_config(arch_id).param_counts()["total"]
+        assert 0.5 * target < total < 1.8 * target, (arch_id, total, target)
+
+
+def test_moe_active_less_than_total():
+    for arch_id in ("deepseek_v2_236b", "moonshot_v1_16b_a3b"):
+        pc = get_config(arch_id).param_counts()
+        assert pc["active"] < 0.25 * pc["total"]

@@ -1,0 +1,73 @@
+"""CNN substrate tests: forwards, compression hooks, reconstruction sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import natural_images, shapes_dataset
+from repro.models import cnn
+
+
+@pytest.fixture(scope="module")
+def img():
+    return jnp.asarray(natural_images(1, 2, 32, 32))
+
+
+@pytest.mark.parametrize("name", ["vgg16_bn", "resnet50", "mobilenet_v1", "mobilenet_v2"])
+def test_cnn_forward_shapes(name, img):
+    init, apply = cnn.MODELS[name]
+    params = init(jax.random.PRNGKey(0))
+    out = apply(params, img)
+    assert out.shape == (2, 21)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_yolo_backbone_forward(img):
+    init, apply = cnn.MODELS["yolov3_backbone"]
+    params = init(jax.random.PRNGKey(0))
+    out = apply(params, img)
+    assert out.shape == (2, 1, 1, 1024)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_compression_changes_activations_slightly(img):
+    init, apply = cnn.MODELS["tiny_cnn"]
+    params = init(jax.random.PRNGKey(1), cin=3)
+    clean = apply(params, img)
+    sched = cnn.CompressionSchedule(n_layers=3)
+    comp = apply(params, img, sched, cnn.FusionStats())
+    # compression is lossy but mild: logits stay close, same argmax mostly
+    assert bool(jnp.all(jnp.isfinite(comp)))
+    rel = float(jnp.linalg.norm(comp - clean) / (jnp.linalg.norm(clean) + 1e-9))
+    assert rel < 0.5
+
+
+def test_fusion_stats_accounting(img):
+    init, apply = cnn.MODELS["tiny_cnn"]
+    params = init(jax.random.PRNGKey(2), cin=3)
+    stats = cnn.FusionStats()
+    apply(params, img, cnn.CompressionSchedule(n_layers=2), stats)
+    assert len(stats.layers) == 3
+    # first two compressed, third pass-through (ratio 1)
+    rs = [float(r) for r in stats.ratios()]
+    assert rs[0] < 1.0 and rs[1] < 1.0 and rs[2] == 1.0
+    assert 0.0 < float(stats.overall_ratio()) <= 1.0
+
+
+def test_relu_sparsity_vs_dense():
+    """Paper motivation: leaky-ReLU (yolo) feature maps are dense, ReLU sparse."""
+    x = jnp.asarray(natural_images(3, 1, 16, 16))
+    init_v, apply_v = cnn.MODELS["tiny_cnn"]
+    params = init_v(jax.random.PRNGKey(3), cin=3)
+    h = cnn.relu(cnn.bn(params["b1"], cnn.conv(params["c1"], x)))
+    dense = cnn.leaky_relu(cnn.bn(params["b1"], cnn.conv(params["c1"], x)))
+    assert float(jnp.mean(h == 0)) > 0.2
+    assert float(jnp.mean(dense == 0)) < 0.05
+
+
+def test_shapes_dataset():
+    imgs, labels = shapes_dataset(0, 64)
+    assert imgs.shape == (64, 32, 32, 1) and labels.shape == (64,)
+    assert set(np.unique(labels)) <= {0, 1, 2, 3}
+    # classes are balanced-ish and images non-trivial
+    assert imgs.std() > 0.1

@@ -1,0 +1,180 @@
+"""Quantization + encoding + end-to-end codec tests (paper Eq. 7-10, Fig. 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compressor, encode as encode_lib, quantize as quant_lib
+from repro.core import dct as dct_lib
+
+
+def natural_image(rng, h, w, alpha=1.5):
+    """1/f^alpha spectrum image — natural-image statistics for codec tests."""
+    fy = np.fft.fftfreq(h)[:, None]
+    fx = np.fft.fftfreq(w)[None, :]
+    f = np.sqrt(fy**2 + fx**2)
+    f[0, 0] = 1.0
+    spec = rng.standard_normal((h, w)) + 1j * rng.standard_normal((h, w))
+    img = np.fft.ifft2(spec / f**alpha).real
+    img = (img - img.mean()) / (img.std() + 1e-9)
+    return img
+
+
+# --------------------------- quantization ----------------------------------
+
+def test_qtable_levels_monotone():
+    """Aggressive levels must have larger table values everywhere."""
+    t0 = quant_lib.qtable_for_level(0)
+    t3 = quant_lib.qtable_for_level(3)
+    assert (t0 >= t3).all() and t0.mean() > t3.mean()
+
+
+def test_qtable_lowfreq_smaller():
+    t = quant_lib.qtable_for_level(1)
+    assert t[0, 0] < t[7, 7]
+    assert t[:2, :2].mean() < t[6:, 6:].mean()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8, 12]))
+def test_minmax_quant_bounds_error(seed, bits):
+    """Eq. 7/10 roundtrip error <= half a quantization step."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-5, 7, (8, 8)))
+    fmin, fmax = quant_lib.compute_range(x)
+    p = quant_lib.QuantParams(fmin, fmax, bits)
+    q1 = quant_lib.quantize_minmax(x, p)
+    back = quant_lib.dequantize_minmax(q1, p)
+    step = float(fmax - fmin) / p.imax
+    assert float(jnp.max(jnp.abs(back - x))) <= step / 2 + 1e-9
+
+
+def test_constant_tensor_quant_safe():
+    x = jnp.full((8, 8), 2.5)
+    fmin, fmax = quant_lib.compute_range(x)
+    assert float(fmax) > float(fmin)  # degenerate range guarded
+
+
+# --------------------------- encoding --------------------------------------
+
+def test_encode_decode_identity():
+    rng = np.random.default_rng(0)
+    q2 = jnp.asarray(rng.integers(-20, 20, (10, 8, 8)))
+    q2 = jnp.where(jnp.abs(q2) < 12, 0, q2)  # sparsify
+    enc = encode_lib.encode_blocks(q2)
+    dec = encode_lib.decode_blocks(enc)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(q2, dtype=np.float32))
+
+
+def test_paper_codec_bits_accounting():
+    q2 = np.zeros((2, 8, 8))
+    q2[0, 0, 0] = 5
+    q2[1, 1, 1] = -3
+    # 2 blocks * 64 index bits + 2 nnz * 8 bits
+    assert encode_lib.paper_codec_bits(q2, value_bits=8) == 2 * 64 + 2 * 8
+
+
+def test_flip_storage_improves_utilization():
+    """Fig. 5: flipping odd blocks packs banks better for corner-heavy data."""
+    rng = np.random.default_rng(1)
+    # top-heavy blocks (zeros bottom-right) — like quantized DCT coefficients
+    idx = np.zeros((16, 8, 8), dtype=bool)
+    for b in range(16):
+        nr = rng.integers(2, 6)
+        for r in range(nr):
+            idx[b, r, : rng.integers(2, 8 - r)] = True
+    u_flip = encode_lib.sram_utilization(idx, flip=True)
+    u_noflip = encode_lib.sram_utilization(idx, flip=False)
+    assert u_flip >= u_noflip
+
+
+def test_rle_and_csr_sane():
+    x = np.zeros((8, 8))
+    x[0, 0] = 1.0
+    assert encode_lib.rle_codec_bits(x) < encode_lib.dense_bits(x)
+    assert encode_lib.csr_codec_bits(x) < encode_lib.dense_bits(x)
+    assert encode_lib.entropy_bound_bits(x) < encode_lib.dense_bits(x)
+
+
+# --------------------------- end-to-end ------------------------------------
+
+@pytest.mark.parametrize("level", [0, 1, 2, 3])
+def test_roundtrip_error_bounded_and_monotone(level):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(natural_image(rng, 32, 32), jnp.float32)
+    pol = compressor.CompressionPolicy(level=level)
+    y = compressor.roundtrip(x, pol)
+    err = float(jnp.sqrt(jnp.mean((y - x) ** 2)))
+    sig = float(jnp.sqrt(jnp.mean(x**2)))
+    assert err / sig < 0.5  # reconstructs the signal
+
+
+def test_gentler_level_lower_error():
+    rng = np.random.default_rng(43)
+    x = jnp.asarray(natural_image(rng, 64, 64), jnp.float32)
+    errs = []
+    for level in range(4):
+        y = compressor.roundtrip(x, compressor.CompressionPolicy(level=level))
+        errs.append(float(jnp.mean((y - x) ** 2)))
+    assert errs[3] < errs[0]  # gentle (deep-layer) level more accurate
+
+
+def test_natural_image_compresses_well():
+    """1/f images: paper reports ~9-35%% ratios for early layers."""
+    rng = np.random.default_rng(44)
+    x = jnp.asarray(natural_image(rng, 128, 128), jnp.float32)
+    c = compressor.compress(x, compressor.CompressionPolicy(level=0))
+    ratio = float(compressor.compression_ratio(c, orig_value_bits=16))
+    assert ratio < 0.45
+
+
+def test_white_noise_compresses_poorly():
+    """No frequency structure -> ratio should be much worse than 1/f."""
+    rng = np.random.default_rng(45)
+    x = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    c_noise = compressor.compress(x, compressor.CompressionPolicy(level=3))
+    nat = jnp.asarray(natural_image(rng, 128, 128), jnp.float32)
+    c_nat = compressor.compress(nat, compressor.CompressionPolicy(level=3))
+    assert float(compressor.compression_ratio(c_noise)) > float(
+        compressor.compression_ratio(c_nat)
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), keep=st.sampled_from([2, 3, 4, 6, 8]))
+def test_truncated_roundtrip_property(seed, keep):
+    """TPU path: shape preserved, error bounded, jit-able."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(natural_image(rng, 24, 16), jnp.float32)
+    y = jax.jit(lambda a: compressor.roundtrip_truncated(a, keep))(x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert bool(jnp.all(jnp.isfinite(y)))
+    if keep == 8:
+        # full corner = int8 quantization only; tight error on unit-scale data
+        assert float(jnp.max(jnp.abs(y - x))) < 0.35
+
+
+def test_truncated_bytes_accounting():
+    rng = np.random.default_rng(46)
+    x = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    c = compressor.compress_truncated(x, keep=4)
+    assert c.coefs.dtype == jnp.int8
+    assert c.coefs.shape[-2:] == (4, 4)
+    # 16 int8 + 8 header bytes per 64 elements = 0.375 B/elem vs 2 B/elem bf16
+    assert abs(c.nbytes_per_element() - 24 / 64) < 1e-9
+
+
+def test_compress_under_jit_and_grad():
+    """Grad flows through the scale path; round() is piecewise-constant
+    (zero grad), matching the hardware's non-differentiable quantizer."""
+    rng = np.random.default_rng(47)
+    x = jnp.asarray(natural_image(rng, 16, 16), jnp.float32)
+
+    def loss(a):
+        return jnp.sum(compressor.roundtrip_truncated(a, 4) ** 2)
+
+    g = jax.grad(loss)(x)
+    assert g.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(g)))

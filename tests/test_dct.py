@@ -1,0 +1,113 @@
+"""DCT core tests: orthogonality, scipy oracle, fast-path equivalence, roundtrip.
+
+Float64 oracle checks run in NumPy against the float64 DCT matrix directly —
+we deliberately do NOT flip jax_enable_x64, which would leak into every other
+test module in the pytest process (conv dtype mismatches etc.).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.fft
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dct as dct_lib
+
+
+def _dct2_np(x: np.ndarray) -> np.ndarray:
+    c = dct_lib._dct_matrix_np(8)
+    return c @ x @ c.T
+
+
+def test_dct_matrix_orthonormal():
+    c = dct_lib._dct_matrix_np(8)
+    np.testing.assert_allclose(c @ c.T, np.eye(8), atol=1e-12)
+
+
+def test_dct_matches_scipy_f64():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 8))
+    ref = scipy.fft.dctn(x, type=2, norm="ortho")
+    np.testing.assert_allclose(_dct2_np(x), ref, atol=1e-10)
+
+
+def test_idct_matches_scipy_f64():
+    rng = np.random.default_rng(1)
+    z = rng.standard_normal((8, 8))
+    c = dct_lib._dct_matrix_np(8)
+    ref = scipy.fft.idctn(z, type=2, norm="ortho")
+    np.testing.assert_allclose(c.T @ z @ c, ref, atol=1e-10)
+
+
+def test_jax_dct_matches_scipy_f32():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 8)).astype(np.float32)
+    ours = np.asarray(dct_lib.dct2_blocks(jnp.asarray(x)))
+    ref = scipy.fft.dctn(np.float64(x), type=2, norm="ortho")
+    np.testing.assert_allclose(ours, ref, atol=1e-4)
+
+
+def test_jax_idct_matches_scipy_f32():
+    rng = np.random.default_rng(1)
+    z = rng.standard_normal((8, 8)).astype(np.float32)
+    ours = np.asarray(dct_lib.idct2_blocks(jnp.asarray(z)))
+    ref = scipy.fft.idctn(np.float64(z), type=2, norm="ortho")
+    np.testing.assert_allclose(ours, ref, atol=1e-4)
+
+
+def test_fast_gong_equals_dense():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((5, 3, 8, 8)).astype(np.float32))
+    dense = dct_lib.dct2_blocks(x)
+    fast = dct_lib.dct2_blocks_fast(x)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(dense), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 40),
+    w=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pad_crop_roundtrip(h, w, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((h, w)).astype(np.float32))
+    padded, _ = dct_lib.pad_to_block(x)
+    assert padded.shape[-1] % 8 == 0 and padded.shape[-2] % 8 == 0
+    back = dct_lib.crop_from_block(padded, (h, w))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nh=st.integers(1, 4),
+    nw=st.integers(1, 4),
+    lead=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dct_idct_identity(nh, nw, lead, seed):
+    """Lossless DCT->IDCT on exact block multiples (property: unitary)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((lead, nh * 8, nw * 8)).astype(np.float32))
+    z = dct_lib.dct2(x)
+    back = dct_lib.idct2(z)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-5)
+
+
+def test_energy_preservation():
+    """Parseval: unitary transform preserves total energy."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((16, 24)).astype(np.float32))
+    z = dct_lib.dct2(x)
+    np.testing.assert_allclose(
+        float(jnp.sum(x**2)), float(jnp.sum(z**2)), rtol=1e-5
+    )
+
+
+def test_dc_component():
+    """Constant block -> all energy in the DC coefficient (8x mean)."""
+    x = jnp.full((8, 8), 3.0)
+    z = np.asarray(dct_lib.dct2_blocks(x))
+    assert abs(z[0, 0] - 8 * 3.0) < 1e-5
+    assert np.abs(z.reshape(-1)[1:]).max() < 1e-5

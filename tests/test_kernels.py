@@ -1,0 +1,216 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes/dtypes per the kernel CI contract; hypothesis drives random
+shape/seed combinations on top of the fixed sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compressor
+from repro.kernels.dct8x8 import ops as dct_ops
+from repro.kernels.dct8x8 import ref as dct_ref
+from repro.kernels.fused_compress import ops as fc_ops
+from repro.kernels.fused_compress import ref as fc_ref
+from repro.kernels.quant_pack import ops as qp_ops
+from repro.kernels.quant_pack import ref as qp_ref
+
+SHAPES = [(8, 8), (8, 128), (64, 64), (128, 128), (40, 264), (256, 136)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ------------------------------ dct8x8 -------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dct_kernel_matches_ref(shape, dtype):
+    x = _rand(shape, dtype, 0)
+    got = dct_ops.dct2(x, interpret=True)
+    want = dct_ref.dct2_plane(x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_idct_kernel_matches_ref(shape):
+    z = _rand(shape, jnp.float32, 1)
+    got = dct_ops.idct2(z, interpret=True)
+    want = dct_ref.idct2_plane(z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_dct_kernel_batched():
+    x = _rand((3, 16, 32), jnp.float32, 2)
+    got = dct_ops.dct2(x, interpret=True)
+    want = jnp.stack([dct_ref.dct2_plane(x[i]) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nh=st.integers(1, 20),
+    nw=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dct_idct_kernel_roundtrip(nh, nw, seed):
+    x = _rand((nh * 8, nw * 8), jnp.float32, seed)
+    z = dct_ops.dct2(x, interpret=True)
+    back = dct_ops.idct2(z, interpret=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+# --------------------------- fused_compress --------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("keep", [2, 4, 6, 8])
+def test_fused_compress_matches_ref(shape, keep):
+    x = _rand(shape, jnp.float32, 3)
+    packed, scale = fc_ops.compress(x, keep, interpret=True)
+    rp, rs = fc_ref.compress_plane(x, keep)
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(rs), rtol=1e-6)
+    # int8 codes may differ by 1 ulp at exact rounding ties — allow off-by-one
+    diff = np.abs(
+        np.asarray(packed, np.int32) - np.asarray(rp, np.int32)
+    )
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("keep", [2, 4, 8])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_decompress_matches_ref(shape, keep, dtype):
+    x = _rand(shape, jnp.float32, 4)
+    packed, scale = fc_ref.compress_plane(x, keep)
+    got = fc_ops.decompress(packed, scale, keep, out_dtype=dtype, interpret=True)
+    want = fc_ref.decompress_plane(packed, scale, keep, dtype=dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        atol=1e-5 if dtype == jnp.float32 else 5e-2,
+    )
+
+
+def test_fused_kernel_consistent_with_compressor():
+    """Kernel path and reference TruncatedCompressed path reconstruct alike."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    keep = 4
+    packed, scale = fc_ops.compress(x, keep, interpret=True)
+    y_kernel = fc_ops.decompress(packed, scale, keep, interpret=True)
+    y_ref = compressor.roundtrip_truncated(x, keep)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_ref), atol=2e-2
+    )
+
+
+def test_fused_compress_batched_shapes():
+    x = _rand((2, 5, 16, 32), jnp.float32, 6)
+    packed, scale = fc_ops.compress(x, 4, interpret=True)
+    assert packed.shape == (2, 5, 8, 16) and packed.dtype == jnp.int8
+    assert scale.shape == (2, 5, 2, 4)
+    y = fc_ops.decompress(packed, scale, 4, interpret=True)
+    assert y.shape == x.shape
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nh=st.integers(1, 8),
+    nw=st.integers(1, 8),
+    keep=st.sampled_from([2, 3, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_roundtrip_error_bound(nh, nw, keep, seed):
+    """keep=8 roundtrip == int8 quantization error only; k<8 bounded energy loss."""
+    x = _rand((nh * 8, nw * 8), jnp.float32, seed)
+    packed, scale = fc_ops.compress(x, keep, interpret=True)
+    y = fc_ops.decompress(packed, scale, keep, interpret=True)
+    assert np.all(np.isfinite(np.asarray(y)))
+    if keep == 8:
+        # |err| <= scale/2 per coefficient; scale <= max|coef|/127
+        assert float(jnp.max(jnp.abs(y - x))) < 0.2 * float(jnp.max(jnp.abs(x)))
+
+
+# ----------------------------- quant_pack ----------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("level", [0, 1, 2, 3])
+def test_quant_pack_matches_ref(shape, level):
+    x = _rand(shape, jnp.float32, 7) * 10.0
+    fmin = float(jnp.min(x))
+    fmax = float(jnp.max(x))
+    q2, idx, nnz = qp_ops.quant_pack(x, fmin, fmax, level=level, interpret=True)
+    rq2, ridx, rnnz = qp_ref.quant_pack_plane(x, fmin, fmax, level)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(rq2))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    assert int(nnz) == int(rnnz)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 12])
+def test_quant_pack_bits_sweep(bits):
+    x = _rand((32, 64), jnp.float32, 8) * 3.0
+    fmin = float(jnp.min(x))
+    fmax = float(jnp.max(x))
+    q2, idx, nnz = qp_ops.quant_pack(x, fmin, fmax, level=1, bits=bits, interpret=True)
+    assert int(nnz) == int(np.count_nonzero(np.asarray(q2)))
+    assert int(nnz) <= x.size
+
+
+# ---------------------------------------------------------------------------
+# fused_attend: decompress+attend kernel vs pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+from repro.core import kv_cache as _kvc
+from repro.kernels.fused_attend import ops as fa_ops
+from repro.kernels.fused_attend.kernel import attend_compressed_plane
+from repro.kernels.fused_attend.ref import attend_compressed_plane_ref
+
+
+@pytest.mark.parametrize("s,hd,keep,h", [
+    (32, 16, 4, 2), (64, 16, 8, 4), (64, 32, 2, 8), (128, 8, 6, 1),
+])
+def test_fused_attend_matches_ref(s, hd, keep, h):
+    rng = np.random.default_rng(s + hd + keep)
+    k = rng.standard_normal((s, hd)).astype(np.float32)
+    v = rng.standard_normal((s, hd)).astype(np.float32)
+    pk, sk = _kvc.compress_kv_blocks(jnp.asarray(k)[None], keep)
+    pv, sv = _kvc.compress_kv_blocks(jnp.asarray(v)[None], keep)
+    q = jnp.asarray(rng.standard_normal((h, hd)).astype(np.float32))
+    pos = jnp.int32(s - 3)
+    acc, m, l = attend_compressed_plane(pk[0], sk[0], pv[0], sv[0], q, pos,
+                                        tile_s=16)
+    acc_r, m_r, l_r = attend_compressed_plane_ref(pk[0], sk[0], pv[0], sv[0], q, pos)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=1e-5)
+
+
+def test_fused_attend_with_tail_matches_core():
+    from repro.configs.base import get_config
+
+    cfg = get_config("yi_6b").reduced()
+    b, max_seq, keep = 2, 64, 6
+    hkv, h, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(5)
+    cache = _kvc.init_compressed_cache(cfg, b, max_seq, keep=keep, dtype=jnp.float32)
+    lc = {"packed_k": cache.packed_k[0], "scale_k": cache.scale_k[0],
+          "packed_v": cache.packed_v[0], "scale_v": cache.scale_v[0],
+          "tail_k": cache.tail_k[0], "tail_v": cache.tail_v[0]}
+    ks = jnp.asarray(rng.standard_normal((b, 30, hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, 30, hkv, hd)).astype(np.float32))
+    for t in range(30):
+        lc = _kvc.update_layer(lc, ks[:, t:t+1], vs[:, t:t+1], jnp.int32(t), keep)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    o_kernel = fa_ops.attend_with_tail(q, lc, jnp.int32(29), tile_s=32)
+    o_core = _kvc.attend_compressed(q, lc, jnp.int32(29), keep, kv_block=32)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_core), atol=1e-4)

@@ -1,0 +1,128 @@
+"""KVCompress unit + property tests (core/kv_cache.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import kv_cache as KV
+from repro.models.layers import chunked_attention
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    hd_blocks=st.integers(1, 3),
+    keep=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_roundtrip_error_bounded(s_blocks, hd_blocks, keep, seed):
+    """Reconstruction error shrinks as keep grows; keep=8 is quant-only."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, s_blocks * 8, hd_blocks * 8)).astype(np.float32))
+    q, s = KV.compress_kv_blocks(x, keep)
+    assert q.dtype == jnp.int8
+    assert q.shape == (2, s_blocks, hd_blocks, keep, keep)
+    back = KV.decompress_kv_blocks(q, s, jnp.float32)
+    err = float(jnp.linalg.norm(back - x) / (jnp.linalg.norm(x) + 1e-9))
+    if keep == 8:
+        assert err < 0.05  # int8 quantization floor
+    assert err < 1.05  # never worse than dropping everything (+quant noise)
+
+
+def test_error_monotone_in_keep():
+    rng = np.random.default_rng(0)
+    # smooth (1/f-ish) plane: cumulative sum of noise has low-freq energy
+    x = jnp.asarray(np.cumsum(rng.standard_normal((1, 32, 64)), axis=1).astype(np.float32))
+    errs = []
+    for keep in (1, 2, 4, 6, 8):
+        q, s = KV.compress_kv_blocks(x, keep)
+        back = KV.decompress_kv_blocks(q, s, jnp.float32)
+        errs.append(float(jnp.linalg.norm(back - x)))
+    assert all(a >= b - 1e-3 for a, b in zip(errs, errs[1:])), errs
+
+
+def _layer_cache(cfg, b, max_seq, keep, dtype=jnp.float32):
+    # f32 tails so oracle comparisons see codec error only (prod uses bf16)
+    cache = KV.init_compressed_cache(cfg, b, max_seq, keep=keep, dtype=dtype)
+    return {
+        "packed_k": cache.packed_k[0], "scale_k": cache.scale_k[0],
+        "packed_v": cache.packed_v[0], "scale_v": cache.scale_v[0],
+        "tail_k": cache.tail_k[0], "tail_v": cache.tail_v[0],
+    }
+
+
+def test_decode_attention_matches_raw_oracle():
+    from repro.configs.base import get_config
+
+    cfg = get_config("yi_6b").reduced()
+    b, max_seq, keep = 2, 64, 8
+    hd, hkv, h = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_heads
+    rng = np.random.default_rng(1)
+    ks = jnp.asarray(rng.standard_normal((b, max_seq, hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, max_seq, hkv, hd)).astype(np.float32))
+    lc = _layer_cache(cfg, b, max_seq, keep)
+    for t in range(37):
+        lc = KV.update_layer(lc, ks[:, t:t+1], vs[:, t:t+1], jnp.int32(t), keep)
+    pos = 36
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    out = KV.attend_compressed(q, lc, jnp.int32(pos), keep, kv_block=16)
+    ref = chunked_attention(q, ks[:, :pos+1], vs[:, :pos+1], causal=True, q_offset=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0.02)
+
+
+def test_tail_only_attention():
+    """Positions 0..6: nothing flushed yet — attention over the raw tail."""
+    from repro.configs.base import get_config
+
+    cfg = get_config("yi_6b").reduced()
+    b, keep = 1, 4
+    hd, hkv, h = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_heads
+    rng = np.random.default_rng(2)
+    ks = jnp.asarray(rng.standard_normal((b, 8, hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, 8, hkv, hd)).astype(np.float32))
+    lc = _layer_cache(cfg, b, 32, keep)
+    for t in range(5):
+        lc = KV.update_layer(lc, ks[:, t:t+1], vs[:, t:t+1], jnp.int32(t), keep)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    out = KV.attend_compressed(q, lc, jnp.int32(4), keep, kv_block=16)
+    ref = chunked_attention(q, ks[:, :5], vs[:, :5], causal=True, q_offset=4)
+    # tail is raw -> exact (no compression error at all)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_prefill_compress_matches_incremental():
+    """Bulk prefill compression == feeding tokens one at a time."""
+    from repro.configs.base import get_config
+
+    cfg = get_config("yi_6b").reduced()
+    b, s, keep = 2, 24, 6
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    rng = np.random.default_rng(3)
+    ks = jnp.asarray(rng.standard_normal((b, s, hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, s, hkv, hd)).astype(np.float32))
+    bulk = KV.prefill_compress(ks, vs, keep)
+    lc = _layer_cache(cfg, b, 32, keep)
+    for t in range(s):
+        lc = KV.update_layer(lc, ks[:, t:t+1], vs[:, t:t+1], jnp.int32(t), keep)
+    nflushed = s // 8
+    np.testing.assert_array_equal(
+        np.asarray(bulk["packed_k"][:, :nflushed]),
+        np.asarray(lc["packed_k"][:, :nflushed]),
+    )
+    np.testing.assert_allclose(
+        np.asarray(bulk["scale_k"][:, :nflushed]),
+        np.asarray(lc["scale_k"][:, :nflushed]), rtol=1e-6,
+    )
+
+
+def test_compressed_bytes_accounting():
+    from repro.configs.base import get_config
+
+    cfg = get_config("yi_6b").reduced()
+    cache = KV.init_compressed_cache(cfg, 2, 64, keep=4)
+    per_tok = cache.nbytes_per_token_per_layer()
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    raw = 2 * hkv * hd * 2  # k+v bf16
+    assert per_tok < 0.4 * raw  # >2.5x saving at keep=4

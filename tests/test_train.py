@@ -1,0 +1,155 @@
+"""Training-stack integration tests: loss decreases, remat modes agree,
+optimizer behaves, checkpoint resume is exact."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import TokenStream
+from repro.models import api as model_api
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train import step as train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    api = model_api.build_reduced("qwen2_0_5b")
+    ts = TokenStream(vocab_size=api.cfg.vocab_size, seq_len=64, global_batch=8)
+    return api, ts
+
+
+def _run(api, ts, tc, steps=20):
+    state = train_step.init_train_state(api, tc)
+    step = jax.jit(train_step.make_train_step(api, jax.make_mesh((1,), ("data",)), tc),
+                   donate_argnums=(0,))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ts.batch(i).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_loss_decreases(setup):
+    api, ts = setup
+    tc = train_step.TrainConfig(
+        microbatches=2, remat="full",
+        optimizer=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=50),
+    )
+    losses, _ = _run(api, ts, tc, steps=25)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def _tree_cosine(a, b):
+    num = sum(float(jnp.sum(x * y)) for x, y in
+              zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    na = np.sqrt(sum(float(jnp.sum(x * x)) for x in jax.tree.leaves(a)))
+    nb = np.sqrt(sum(float(jnp.sum(y * y)) for y in jax.tree.leaves(b)))
+    return num / (na * nb)
+
+
+def test_remat_modes_agree_step1(setup):
+    """none == full exactly; compressed-remat gradient alignment is MONOTONE
+    in keep and exact-ish at keep=8 (int8 quantization only).
+
+    Note: at RANDOM INIT the residual stream is spectrally white — the
+    worst case for DCT truncation — so absolute cosine at small keep is
+    pessimistic vs. trained activations (convergence parity is covered by
+    test_loss_decreases-style runs with remat='compressed')."""
+    api, ts = setup
+    batch = {k: jnp.asarray(v) for k, v in ts.batch(0).items()}
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    def g(remat, keep=8):
+        return jax.grad(
+            lambda p: api.loss(p, batch, remat=remat, compress_keep=keep)[0]
+        )(params)
+
+    g_none, g_full = g("none"), g("full")
+    # "full" remat routes through the bf16-wire gradient boundary (layers.py
+    # _matmul_bf16_wgrad + the remat wrapper) — agreement is to bf16 precision
+    cos_full = _tree_cosine(g_none, g_full)
+    assert cos_full > 0.999, cos_full
+    cos8 = _tree_cosine(g_none, g("compressed", keep=8))
+    cos4 = _tree_cosine(g_none, g("compressed", keep=4))
+    assert cos8 > 0.99, cos8          # quantization-only floor
+    assert cos8 >= cos4 - 0.02        # monotone in keep
+    assert cos4 > 0.3                 # still descent-aligned at init
+
+
+def test_compressed_remat_trains(setup):
+    """ActCompress end-to-end: training converges ~like full remat."""
+    api, ts = setup
+    out = {}
+    for remat in ("full", "compressed"):
+        tc = train_step.TrainConfig(
+            microbatches=1, remat=remat, compress_keep=6,
+            optimizer=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=50),
+        )
+        losses, _ = _run(api, ts, tc, steps=25)
+        out[remat] = np.mean(losses[-5:])
+    assert out["compressed"] < out["full"] + 0.35, out
+
+
+def test_microbatch_equivalence(setup):
+    """1 vs 4 microbatches give identical grads (up to f32 reassociation)."""
+    api, ts = setup
+    batch = {k: jnp.asarray(v) for k, v in ts.batch(0).items()}
+    mesh = jax.make_mesh((1,), ("data",))
+    outs = []
+    for n in (1, 4):
+        tc = train_step.TrainConfig(microbatches=n, remat="none")
+        state = train_step.init_train_state(api, tc)
+        step = jax.jit(train_step.make_train_step(api, mesh, tc))
+        _, m = step(state, batch)
+        outs.append(float(m["loss"]))
+    assert abs(outs[0] - outs[1]) < 1e-2
+
+
+def test_grad_clip_and_schedule():
+    params = {"w": jnp.ones((8, 8))}
+    grads = {"w": jnp.full((8, 8), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(800.0)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-5)
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(5))) == pytest.approx(5e-4)
+    assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_checkpoint_resume_exact(tmp_path, setup):
+    """Stop at step 6, restore, continue -> bitwise-identical to uninterrupted."""
+    from repro.ckpt import store
+
+    api, ts = setup
+    tc = train_step.TrainConfig(
+        microbatches=1, remat="full",
+        optimizer=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30),
+    )
+    mesh = jax.make_mesh((1,), ("data",))
+    step = jax.jit(train_step.make_train_step(api, mesh, tc))
+
+    def batch(i):
+        return {k: jnp.asarray(v) for k, v in ts.batch(i).items()}
+
+    # uninterrupted 10 steps
+    state_a = train_step.init_train_state(api, tc)
+    for i in range(10):
+        state_a, _ = step(state_a, batch(i))
+
+    # interrupted at 6 + resume
+    state_b = train_step.init_train_state(api, tc)
+    for i in range(6):
+        state_b, _ = step(state_b, batch(i))
+    root = str(tmp_path / "ck")
+    store.save(root, 6, state_b)
+    restored, at = store.restore(root, jax.eval_shape(lambda: train_step.init_train_state(api, tc)))
+    assert at == 6
+    for i in range(6, 10):
+        restored, _ = step(restored, batch(i))
+
+    for a, b in zip(jax.tree.leaves(state_a["params"]), jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
