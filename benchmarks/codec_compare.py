@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compressor, encode
+from repro import codec
+from repro.core import encode
 from repro.data.synthetic import natural_images
 from repro.models import cnn
 
@@ -36,15 +37,23 @@ def activations(dense: bool, size=64, batch=2, seed=0):
 
 def run_case(act: np.ndarray, level: int = 1) -> dict:
     dense_b = encode.dense_bits(act, 16)
-    policy = compressor.CompressionPolicy(level=level)
-    comp = compressor.compress(jnp.asarray(act), policy)
+    policy = codec.CompressionPolicy(level=level)
+    comp = codec.paper_compress(jnp.asarray(act), policy)
     paper_b = float(encode.paper_codec_bits(np.asarray(comp.values * comp.index), 8))
     # reconstruction error of the lossy paper codec
-    rec = compressor.decompress(comp)
+    rec = codec.paper_decompress(comp)
     rel_err = float(jnp.linalg.norm(rec - act) / (jnp.linalg.norm(act) + 1e-9))
+    # the TPU runtime scheme on the same activations (fixed k x k corner)
+    runtime = codec.Codec(keep=policy.keep())
+    rt_c = runtime.compress(jnp.asarray(act))
+    rt_rec = runtime.decompress(rt_c)
+    rt_err = float(jnp.linalg.norm(rt_rec - act) / (jnp.linalg.norm(act) + 1e-9))
     out = {
         "dense_16b": 1.0,
         "paper_dct": paper_b / dense_b,
+        "runtime_truncated": runtime.storage_stats(rt_c, 16)["ratio"],
+        "runtime_rel_err": rt_err,
+        "backend": codec.resolve_backend_name(None),
         "bitmap_raw": encode.bitmap_codec_bits(act, 16) / dense_b,
         "rle_raw": encode.rle_codec_bits(act, 16) / dense_b,
         "csr_raw": encode.csr_codec_bits(act, 16) / dense_b,
@@ -62,8 +71,9 @@ def main(quick: bool = False):
     for case, dense in (("relu_sparse", False), ("leaky_dense", True)):
         res = run_case(activations(dense, size=size))
         results[case] = res
-        print(f"-- {case} (zeros {res['zero_frac']*100:.0f}%)")
-        for k in ("paper_dct", "bitmap_raw", "rle_raw", "csr_raw", "entropy_bound_raw"):
+        print(f"-- {case} (zeros {res['zero_frac']*100:.0f}%, backend {res['backend']})")
+        for k in ("paper_dct", "runtime_truncated", "bitmap_raw", "rle_raw",
+                  "csr_raw", "entropy_bound_raw"):
             print(f"   {k:18s} {res[k]*100:6.1f}% of dense")
         print(f"   paper codec relative reconstruction err {res['paper_rel_err']:.3f}")
     # paper's argument: on DENSE activations the raw codecs exceed dense

@@ -1,0 +1,91 @@
+"""repro.codec — unified feature-map codec with a pluggable backend registry.
+
+The single seam between the paper's compression algorithms and their
+implementations: `reference` (pure-JAX einsum, runs and differentiates
+anywhere) and `pallas` (fused TPU kernels, the default on TPU; interpret
+mode on CPU).  See `repro.codec.api` for the schemes and
+`repro.codec.dispatch` for selection rules (env: REPRO_CODEC_BACKEND,
+REPRO_CODEC_INTERPRET).
+"""
+from repro.codec import dispatch
+from repro.codec.api import (
+    BLOCK,
+    Codec,
+    Compressed,
+    CompressionPolicy,
+    TruncatedCompressed,
+    compress,
+    compress_blocks,
+    compression_ratio,
+    dct2,
+    decompress,
+    decompress_blocks,
+    idct2,
+    paper_compress,
+    paper_decompress,
+    paper_roundtrip,
+    paper_storage_bits,
+    quant_pack,
+    roundtrip,
+    storage_stats,
+)
+from repro.codec.dispatch import (
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend_name,
+    resolve_interpret,
+    set_default_backend,
+)
+from repro.codec.reference import ReferenceBackend
+
+
+def _pallas_factory():
+    # Deferred: importing the Pallas backend pulls jax.experimental.pallas and
+    # all three kernel modules — reference-only consumers (CPU) never pay it.
+    from repro.codec.pallas_backend import PallasBackend
+
+    return PallasBackend()
+
+
+register_backend("reference", ReferenceBackend)
+register_backend("pallas", _pallas_factory)
+
+
+def __getattr__(name):
+    if name == "PallasBackend":
+        from repro.codec.pallas_backend import PallasBackend
+
+        return PallasBackend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "BLOCK",
+    "Codec",
+    "Compressed",
+    "CompressionPolicy",
+    "PallasBackend",
+    "ReferenceBackend",
+    "TruncatedCompressed",
+    "available_backends",
+    "compress",
+    "compress_blocks",
+    "compression_ratio",
+    "dct2",
+    "decompress",
+    "decompress_blocks",
+    "dispatch",
+    "get_backend",
+    "idct2",
+    "paper_compress",
+    "paper_decompress",
+    "paper_roundtrip",
+    "paper_storage_bits",
+    "quant_pack",
+    "register_backend",
+    "resolve_backend_name",
+    "resolve_interpret",
+    "roundtrip",
+    "set_default_backend",
+    "storage_stats",
+]

@@ -1,0 +1,338 @@
+"""Unified feature-map codec API (paper §III, DESIGN.md §2).
+
+Every consumer of feature-map compression in the repo — the paper-exact CNN
+pipeline, ActCompress checkpointing, the compressed KV cache, serving, and
+the benchmarks — routes through this module.  It owns the shared
+boilerplate the per-kernel ``ops.py`` shims used to duplicate (8-alignment
+padding, leading-dim folding, backend/interpret selection) and dispatches
+the actual math to a registered backend (`reference` pure-JAX einsum or
+`pallas` fused kernels; see `repro.codec.dispatch`).
+
+Two schemes, matching the two pipelines the paper describes:
+
+* **truncated** (TPU runtime path): fused DCT -> keep the k x k
+  low-frequency corner -> per-tile symmetric int8.  Fixed shapes, usable
+  inside jit/scan/custom_vjp.  `Codec` / `compress` / `decompress` /
+  `roundtrip` / `storage_stats`, with `compress_blocks`/`decompress_blocks`
+  as the container-free layer for consumers that manage their own storage
+  (the KV cache).
+* **paper** (bit-faithful pipeline, Eq. 2-10 + Fig. 5): DCT -> min-max
+  m-bit quant -> Q-table quant -> bitmap index.  `paper_compress` /
+  `paper_decompress` / `paper_roundtrip` / `compression_ratio`.
+
+Leading dims: all entry points take ``(..., H, W)`` and work per trailing
+plane.  After padding H to a multiple of 8, leading dims are folded into the
+row axis (exact for 8x8 tiling — no block straddles a fold boundary), so a
+whole ``(N, C, H, W)`` activation batch is one backend call, not an N*C
+Python loop.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec import dispatch
+from repro.core import dct as dct_lib
+from repro.core import encode as encode_lib
+from repro.core import quantize as quant_lib
+
+BLOCK = 8
+
+
+# ---------------------------------------------------------------------------
+# Policies and compressed containers (canonical home; repro.core.compressor
+# re-exports these names for backward compatibility)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompressionPolicy:
+    """Per-layer policy (paper: 2-bit level register + compressed-layer set)."""
+
+    level: int = 1          # 0 aggressive ... 3 gentle (paper's 4 levels)
+    bits: int = 8           # step-1 integer precision m
+    enabled: bool = True
+
+    def keep(self) -> int:
+        return quant_lib.level_to_keep(self.level)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Compressed:
+    """Paper-exact compressed representation of a (..., H, W) tensor."""
+
+    values: jax.Array      # (..., nh, nw, 8, 8) quantized coefficients (int32)
+    index: jax.Array       # same shape, bool
+    fmin: jax.Array
+    fmax: jax.Array
+    level: int
+    bits: int
+    orig_hw: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.values, self.index, self.fmin, self.fmax), (
+            self.level,
+            self.bits,
+            self.orig_hw,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, index, fmin, fmax = children
+        level, bits, orig_hw = aux
+        return cls(values, index, fmin, fmax, level, bits, orig_hw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TruncatedCompressed:
+    """(..., nh, nw, k, k) int8 low-frequency corners + per-tile scale.
+
+    `zero` is retained for layout compatibility with the original runtime
+    container; the codec always writes (and assumes) zeros there — the
+    truncated scheme quantizes symmetrically.
+    """
+
+    coefs: jax.Array       # int8
+    scale: jax.Array       # (..., nh, nw, 1, 1) f32
+    zero: jax.Array        # (..., nh, nw, 1, 1) f32 (always zeros)
+    keep: int
+    orig_hw: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.coefs, self.scale, self.zero), (self.keep, self.orig_hw)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        coefs, scale, zero = children
+        keep, orig_hw = aux
+        return cls(coefs, scale, zero, keep, orig_hw)
+
+    def nbytes_per_element(self) -> float:
+        """Compressed bytes per original element (the runtime ratio)."""
+        k = self.keep
+        per_tile = k * k * 1 + 8  # int8 corner + f32 scale/zero header
+        return per_tile / (BLOCK * BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# Container-free blocks layer (consumers with their own storage: KV cache)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("keep", "backend"))
+def _compress_blocks(x, keep, backend):
+    b = dispatch.get_backend(backend)
+    *lead, r, c = x.shape
+    q, scale = b.compress_plane(x.reshape(-1, c), keep)
+    nh, nw = r // BLOCK, c // BLOCK
+    return (
+        q.reshape(*lead, nh, nw, keep, keep),
+        scale.reshape(*lead, nh, nw),
+    )
+
+
+def compress_blocks(x: jax.Array, keep: int, backend: str | None = None):
+    """(..., R, C) with R % 8 == C % 8 == 0 -> fused DCT+truncate+int8.
+
+    Returns (coefs (..., R/8, C/8, k, k) int8, scale (..., R/8, C/8) f32).
+    """
+    *_, r, c = x.shape
+    if r % BLOCK or c % BLOCK:
+        raise ValueError(f"plane dims must be multiples of {BLOCK}, got {(r, c)}")
+    return _compress_blocks(x, keep, dispatch.resolve_backend_name(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "backend"))
+def _decompress_blocks(q, scale, out_dtype, backend):
+    b = dispatch.get_backend(backend)
+    *lead, nh, nw, k, _ = q.shape
+    out = b.decompress_plane(q.reshape(-1, nw, k, k), scale.reshape(-1, nw),
+                             out_dtype=out_dtype)
+    return out.reshape(*lead, nh * BLOCK, nw * BLOCK)
+
+
+def decompress_blocks(q: jax.Array, scale: jax.Array, out_dtype=jnp.float32,
+                      backend: str | None = None) -> jax.Array:
+    """Inverse of `compress_blocks` -> (..., R, C)."""
+    return _decompress_blocks(q, scale, out_dtype,
+                              dispatch.resolve_backend_name(backend))
+
+
+# ---------------------------------------------------------------------------
+# Blocked 8x8 DCT/IDCT dispatch (any leading dims; trailing dims 8-aligned)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("inverse", "backend"))
+def _dct2(x, inverse, backend):
+    b = dispatch.get_backend(backend)
+    shape = x.shape
+    out = b.dct2_plane(x.reshape(-1, shape[-1]), inverse=inverse)
+    return out.reshape(shape)
+
+
+def dct2(x: jax.Array, inverse: bool = False, backend: str | None = None) -> jax.Array:
+    """Blocked 8x8 2-D DCT (or IDCT) over the trailing two dims."""
+    *_, r, c = x.shape
+    if r % BLOCK or c % BLOCK:
+        raise ValueError(f"plane dims must be multiples of {BLOCK}, got {(r, c)}")
+    return _dct2(x, inverse, dispatch.resolve_backend_name(backend))
+
+
+def idct2(x: jax.Array, backend: str | None = None) -> jax.Array:
+    return dct2(x, inverse=True, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Paper-exact quantize + bitmap index dispatch (Eq. 7-8)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("level", "bits", "backend"))
+def _quant_pack(x, fmin, fmax, level, bits, backend):
+    b = dispatch.get_backend(backend)
+    shape = x.shape
+    q2, idx, nnz = b.quant_pack_plane(x.reshape(-1, shape[-1]), fmin, fmax,
+                                      level, bits=bits)
+    return q2.reshape(shape), idx.reshape(shape), nnz
+
+
+def quant_pack(x: jax.Array, fmin, fmax, level: int = 1, bits: int = 8,
+               backend: str | None = None):
+    """Two-step quantization + 1-bit index of aligned (..., R, C) coefficients.
+
+    Returns (q2 int32, index int8, nnz int32 scalar).
+    """
+    return _quant_pack(x, fmin, fmax, level, bits,
+                       dispatch.resolve_backend_name(backend))
+
+
+# ---------------------------------------------------------------------------
+# Truncated scheme: the Codec facade
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Codec:
+    """Runtime feature-map codec: DCT-truncated int8 with pluggable backends.
+
+    `backend=None` auto-selects per `repro.codec.dispatch` (fused Pallas on
+    TPU, pure-JAX reference elsewhere). The reference backend is the one to
+    force when gradients must flow *through* the codec (the Pallas kernels
+    define no VJP); ActCompress never differentiates through it, so the
+    default is safe there.
+    """
+
+    keep: int = 4
+    backend: str | None = None
+
+    def compress(self, x: jax.Array) -> TruncatedCompressed:
+        """(..., H, W) -> int8 k x k corners; edge-pads H, W to 8-multiples."""
+        *_, h, w = x.shape
+        padded, _ = dct_lib.pad_to_block(x)
+        q, scale = compress_blocks(padded, self.keep, backend=self.backend)
+        scale = scale[..., None, None]
+        return TruncatedCompressed(
+            coefs=q, scale=scale, zero=jnp.zeros_like(scale),
+            keep=self.keep, orig_hw=(h, w),
+        )
+
+    def decompress(self, c: TruncatedCompressed, dtype=jnp.float32) -> jax.Array:
+        x = decompress_blocks(c.coefs, c.scale[..., 0, 0], jnp.float32,
+                              backend=self.backend)
+        return dct_lib.crop_from_block(x, c.orig_hw).astype(dtype)
+
+    def roundtrip(self, x: jax.Array) -> jax.Array:
+        """Lossy reconstruct — what the next layer actually consumes."""
+        return self.decompress(self.compress(x), x.dtype)
+
+    def storage_stats(self, c: TruncatedCompressed,
+                      orig_value_bits: int = 16) -> dict[str, float]:
+        """Static storage accounting (no device work): bits, ratio, B/elem."""
+        k = c.keep
+        ntiles = int(np.prod(c.coefs.shape[:-2]))
+        comp_bits = ntiles * (k * k * 8 + 64)  # int8 corner + f32 scale/zero
+        h, w = c.orig_hw
+        lead = int(np.prod(c.coefs.shape[:-4])) if c.coefs.ndim > 4 else 1
+        orig_bits = lead * h * w * orig_value_bits
+        return {
+            "compressed_bits": float(comp_bits),
+            "orig_bits": float(orig_bits),
+            "ratio": comp_bits / orig_bits,
+            "bytes_per_element": c.nbytes_per_element(),
+        }
+
+
+def compress(x: jax.Array, keep: int = 4, backend: str | None = None) -> TruncatedCompressed:
+    return Codec(keep=keep, backend=backend).compress(x)
+
+
+def decompress(c: TruncatedCompressed, dtype=jnp.float32,
+               backend: str | None = None) -> jax.Array:
+    return Codec(keep=c.keep, backend=backend).decompress(c, dtype)
+
+
+def roundtrip(x: jax.Array, keep: int = 4, backend: str | None = None) -> jax.Array:
+    return Codec(keep=keep, backend=backend).roundtrip(x)
+
+
+def storage_stats(c: TruncatedCompressed, orig_value_bits: int = 16) -> dict[str, float]:
+    return Codec(keep=c.keep).storage_stats(c, orig_value_bits)
+
+
+# ---------------------------------------------------------------------------
+# Paper scheme (Eq. 2-10 + Fig. 5 bitmap encode)
+# ---------------------------------------------------------------------------
+
+def paper_compress(x: jax.Array, policy: CompressionPolicy,
+                   backend: str | None = None) -> Compressed:
+    """Paper pipeline: pad -> DCT -> quant x2 -> bitmap encode."""
+    *_, h, w = x.shape
+    padded, _ = dct_lib.pad_to_block(x)
+    coefs = dct2(padded, backend=backend)
+    fmin, fmax = quant_lib.compute_range(coefs)
+    q2, idx, _ = quant_pack(coefs, fmin, fmax, policy.level, policy.bits,
+                            backend=backend)
+    return Compressed(
+        values=dct_lib._blockize(q2),
+        index=dct_lib._blockize(idx).astype(bool),
+        fmin=fmin,
+        fmax=fmax,
+        level=policy.level,
+        bits=policy.bits,
+        orig_hw=(h, w),
+    )
+
+
+def paper_decompress(c: Compressed, dtype=jnp.float32,
+                     backend: str | None = None) -> jax.Array:
+    """Inverse: decode -> inverse quant x2 -> IDCT -> crop."""
+    q2 = encode_lib.decode_blocks(
+        encode_lib.EncodedBlocks(values=c.values, index=c.index)
+    )
+    params = quant_lib.QuantParams(fmin=c.fmin, fmax=c.fmax, bits=c.bits)
+    coefs = quant_lib.dequantize_blocks(q2, params, c.level)
+    x = idct2(dct_lib._unblockize(coefs), backend=backend)
+    return dct_lib.crop_from_block(x, c.orig_hw).astype(dtype)
+
+
+def paper_roundtrip(x: jax.Array, policy: CompressionPolicy,
+                    backend: str | None = None) -> jax.Array:
+    return paper_decompress(paper_compress(x, policy, backend), x.dtype, backend)
+
+
+def paper_storage_bits(c: Compressed) -> jax.Array:
+    """Exact compressed bit count: 64 index bits per block + `bits` per
+    non-zero (the per-tensor fmin/fmax header is negligible and ignored, as
+    in the paper)."""
+    nblocks = c.index.size // (BLOCK * BLOCK)
+    return nblocks * BLOCK * BLOCK + jnp.sum(c.index) * c.bits
+
+
+def compression_ratio(c: Compressed, orig_value_bits: int = 16) -> jax.Array:
+    """Paper Eq. 20: compressed bits / original bits (lower = better)."""
+    h, w = c.orig_hw
+    lead = int(np.prod(c.values.shape[:-4])) if c.values.ndim > 4 else 1
+    orig_bits = lead * h * w * orig_value_bits
+    return paper_storage_bits(c) / orig_bits

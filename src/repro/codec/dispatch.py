@@ -1,0 +1,85 @@
+"""Backend dispatch for the unified feature-map codec (`repro.codec`).
+
+One seam for every decision the old per-kernel ``ops.py`` shims each made on
+their own: which backend implements a transform (pure-JAX ``reference`` vs
+fused Pallas), whether a Pallas call compiles or interprets, and how
+arbitrary ``(..., H, W)`` tensors are folded into the 2-D planes the kernels
+consume.
+
+Backend selection order (first hit wins):
+  1. an explicit ``backend=`` argument at the call site
+  2. a process-wide override installed with `set_default_backend`
+  3. the ``REPRO_CODEC_BACKEND`` environment variable
+  4. auto: ``"pallas"`` when ``jax.default_backend() == "tpu"``, else
+     ``"reference"`` (the einsum path, which also differentiates).
+
+Interpret-mode selection (consulted by the Pallas backend only): compiled on
+TPU, interpret elsewhere (CPU CI), overridable with
+``REPRO_CODEC_INTERPRET=0/1``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+
+ENV_BACKEND = "REPRO_CODEC_BACKEND"
+ENV_INTERPRET = "REPRO_CODEC_INTERPRET"
+
+_REGISTRY: dict[str, Callable[[], object]] = {}
+_INSTANCES: dict[str, object] = {}
+_default_override: str | None = None
+
+
+def register_backend(name: str, factory: Callable[[], object]) -> None:
+    """Register a backend factory under `name` (later wins, instance reset)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def set_default_backend(name: str | None) -> None:
+    """Process-wide backend override; `None` restores auto selection."""
+    global _default_override
+    if name is not None and name not in _REGISTRY:
+        raise KeyError(f"unknown codec backend {name!r}; have {available_backends()}")
+    _default_override = name
+
+
+def resolve_backend_name(name: str | None = None) -> str:
+    """Resolve `name` (None = auto) to a concrete backend name.
+
+    Resolution happens OUTSIDE jit boundaries so the chosen name can ride as
+    a static argument and the env/override is re-read on every call.
+    """
+    if name is not None:
+        return name
+    if _default_override is not None:
+        return _default_override
+    env = os.environ.get(ENV_BACKEND)
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def get_backend(name: str | None = None):
+    name = resolve_backend_name(name)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec backend {name!r}; have {available_backends()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Pallas kernels compile on TPU and interpret elsewhere unless forced."""
+    if interpret is not None:
+        return interpret
+    env = os.environ.get(ENV_INTERPRET)
+    if env in ("0", "1"):
+        return env == "1"
+    return jax.default_backend() != "tpu"

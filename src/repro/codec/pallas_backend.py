@@ -1,0 +1,64 @@
+"""Fused Pallas `pallas` codec backend.
+
+Wraps the raw kernels in `repro.kernels.*` with the one policy decision they
+need — compile vs interpret — taken from `repro.codec.dispatch` instead of
+being copy-pasted at every call site.  Layout conversion between the
+kernels' plane-packed int8 output ``(R*k/8, C*k/8)`` and the repo-canonical
+blocks layout ``(R/8, C/8, k, k)`` happens here, so consumers only ever see
+one compressed representation regardless of backend.
+
+This backend is the default on TPU (see dispatch.resolve_backend_name); on
+CPU it runs the kernels in interpret mode, which the parity tests in
+tests/test_codec_backends.py use to pin it against `reference`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codec import dispatch
+from repro.core import quantize as quant_lib
+from repro.kernels.dct8x8 import kernel as dct_kernel
+from repro.kernels.fused_compress import kernel as fc_kernel
+from repro.kernels.quant_pack import kernel as qp_kernel
+
+BLOCK = 8
+
+
+class PallasBackend:
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None):
+        self._interpret = interpret  # None = auto (compiled on TPU only)
+
+    @property
+    def interpret(self) -> bool:
+        return dispatch.resolve_interpret(self._interpret)
+
+    def dct2_plane(self, x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+        return dct_kernel.dct2_plane_pallas(
+            x, inverse=inverse, interpret=self.interpret
+        )
+
+    def compress_plane(self, x: jnp.ndarray, keep: int):
+        packed, scale = fc_kernel.compress_plane_pallas(
+            x, keep, interpret=self.interpret
+        )
+        nh, nw = scale.shape
+        q = packed.reshape(nh, keep, nw, keep)
+        return jnp.swapaxes(q, 1, 2), scale
+
+    def decompress_plane(self, q: jnp.ndarray, scale: jnp.ndarray,
+                         out_dtype=jnp.float32) -> jnp.ndarray:
+        keep = q.shape[-1]
+        nh, nw = scale.shape
+        packed = jnp.swapaxes(q, 1, 2).reshape(nh * keep, nw * keep)
+        return fc_kernel.decompress_plane_pallas(
+            packed, scale, keep, out_dtype=out_dtype, interpret=self.interpret
+        )
+
+    def quant_pack_plane(self, x: jnp.ndarray, fmin, fmax, level: int,
+                         bits: int = 8):
+        qt_plane = quant_lib.qtable_plane(level, *x.shape)
+        return qp_kernel.quant_pack_plane_pallas(
+            x, fmin, fmax, qt_plane, bits=bits, interpret=self.interpret
+        )

@@ -1,0 +1,65 @@
+"""Pure-JAX `reference` codec backend.
+
+Implements the backend plane protocol with einsum 8x8 transforms — runs on
+any JAX backend, differentiates (the Pallas kernels do not define VJPs), and
+serves as the numerical oracle the `pallas` backend is tested against.
+
+Plane protocol (all planes are 2-D with R % 8 == 0 and C % 8 == 0; leading
+dims are folded away by `repro.codec.api` before dispatch):
+
+  dct2_plane(x, inverse)            -> (R, C) blocked 8x8 DCT/IDCT
+  compress_plane(x, keep)           -> (q (R/8, C/8, k, k) int8,
+                                        scale (R/8, C/8) f32)
+  decompress_plane(q, scale, dtype) -> (R, C)
+  quant_pack_plane(x, fmin, fmax, level, bits)
+                                    -> (q2 i32, index i8, nnz i32)  [Eq. 7-8]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import dct as dct_lib
+from repro.core import quantize as quant_lib
+
+BLOCK = 8
+
+
+def _dct_rows(keep: int) -> jnp.ndarray:
+    """(keep, 8) top rows of the orthonormal DCT matrix — fused DCT+truncate."""
+    return jnp.asarray(dct_lib._dct_matrix_np(BLOCK)[:keep], jnp.float32)
+
+
+class ReferenceBackend:
+    name = "reference"
+
+    def dct2_plane(self, x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+        blocks = dct_lib._blockize(x)
+        f = dct_lib.idct2_blocks if inverse else dct_lib.dct2_blocks
+        return dct_lib._unblockize(f(blocks, jnp.float32)).astype(x.dtype)
+
+    def compress_plane(self, x: jnp.ndarray, keep: int):
+        ck = _dct_rows(keep)
+        blocks = dct_lib._blockize(x.astype(jnp.float32))
+        z = jnp.einsum("ua,...ab,vb->...uv", ck, blocks, ck)  # DCT + truncate
+        amax = jnp.max(jnp.abs(z), axis=(-1, -2), keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(z / scale), -127, 127).astype(jnp.int8)
+        return q, scale[..., 0, 0]
+
+    def decompress_plane(self, q: jnp.ndarray, scale: jnp.ndarray,
+                         out_dtype=jnp.float32) -> jnp.ndarray:
+        ck = _dct_rows(q.shape[-1])
+        z = q.astype(jnp.float32) * scale[..., None, None]
+        t = jnp.einsum("ua,...uv,vb->...ab", ck, z, ck)  # zero-pad + IDCT
+        return dct_lib._unblockize(t).astype(out_dtype)
+
+    def quant_pack_plane(self, x: jnp.ndarray, fmin, fmax, level: int,
+                         bits: int = 8):
+        params = quant_lib.QuantParams(
+            jnp.asarray(fmin, jnp.float32), jnp.asarray(fmax, jnp.float32), bits
+        )
+        q1 = quant_lib.quantize_minmax(x.astype(jnp.float32), params)
+        qt = quant_lib.qtable_plane(level, *x.shape)
+        q2 = jnp.round((q1 - params.zero_point) / qt)
+        index = (q2 != 0).astype(jnp.int8)
+        return q2.astype(jnp.int32), index, jnp.sum(index.astype(jnp.int32))

@@ -1,17 +1,11 @@
-"""Paper core: interlayer feature-map compression (DCT + quant + sparse code)."""
-from repro.core.compressor import (
-    Compressed,
-    CompressionPolicy,
-    TruncatedCompressed,
-    compress,
-    compress_truncated,
-    compression_ratio,
-    decompress,
-    decompress_truncated,
-    roundtrip,
-    roundtrip_truncated,
-)
+"""Paper core: interlayer feature-map compression (DCT + quant + sparse code).
 
+Submodules import lazily (PEP 562) so that `repro.codec` — which the
+compressor facade delegates to — can import `repro.core.dct` /
+`repro.core.quantize` without triggering the facade and creating an import
+cycle.  `from repro.core import compressor` and `repro.core.Compressed`
+both keep working.
+"""
 __all__ = [
     "Compressed",
     "CompressionPolicy",
@@ -24,3 +18,11 @@ __all__ = [
     "roundtrip",
     "roundtrip_truncated",
 ]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.core import compressor
+
+        return getattr(compressor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

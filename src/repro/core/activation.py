@@ -22,7 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import compressor
+from repro import codec as codec_lib
 
 
 def _compressible(x: jax.Array) -> bool:
@@ -53,18 +53,19 @@ class SavedAct:
         return cls(children[0], *aux)
 
 
-def compress_activation(x: jax.Array, keep: int):
+def compress_activation(x: jax.Array, keep: int, backend: str | None = None):
     """(..., D) -> TruncatedCompressed of the flattened (rows, D) plane."""
     plane = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    return compressor.compress_truncated(plane, keep)
+    return codec_lib.Codec(keep=keep, backend=backend).compress(plane)
 
 
-def decompress_activation(c, shape, dtype):
-    plane = compressor.decompress_truncated(c, jnp.float32)
+def decompress_activation(c, shape, dtype, backend: str | None = None):
+    plane = codec_lib.Codec(keep=c.keep, backend=backend).decompress(c, jnp.float32)
     return plane.reshape(shape).astype(dtype)
 
 
-def compressed_checkpoint(body, keep: int | None = 4, grad_dtype=None):
+def compressed_checkpoint(body, keep: int | None = 4, grad_dtype=None,
+                          backend: str | None = None):
     """jax.checkpoint analogue whose saved residual is DCT-compressed.
 
     body: (params_pytree, x) -> y with y.shape == x.shape (residual layer).
@@ -78,6 +79,11 @@ def compressed_checkpoint(body, keep: int | None = 4, grad_dtype=None):
     i.e. before XLA's per-layer cross-DP reduction — this is the only place
     a wire-dtype choice can reach the in-loop gradient all-reduce (a cast on
     the stacked grads after the scan is downstream of the collectives).
+
+    backend: codec backend override (None = auto per repro.codec.dispatch).
+    The backward never differentiates *through* the codec — the compression
+    error enters only via the recomputation point — so the fused Pallas
+    backend is safe here.
     """
 
     @jax.custom_vjp
@@ -87,7 +93,7 @@ def compressed_checkpoint(body, keep: int | None = 4, grad_dtype=None):
     def fwd(p, x):
         y = body(p, x)
         if keep is not None and _compressible(x):
-            saved = SavedAct(compress_activation(x, keep), x.shape, x.dtype.name, True)
+            saved = SavedAct(compress_activation(x, keep, backend), x.shape, x.dtype.name, True)
         else:  # raw remat residual (keep=None or shape not 8-alignable)
             saved = SavedAct(x, x.shape, x.dtype.name, False)
         return y, (p, saved)
@@ -96,7 +102,7 @@ def compressed_checkpoint(body, keep: int | None = 4, grad_dtype=None):
         p, saved = res
         if saved.compressed:
             x_hat = decompress_activation(
-                saved.payload, saved.shape, jnp.dtype(saved.dtype_name)
+                saved.payload, saved.shape, jnp.dtype(saved.dtype_name), backend
             )
         else:
             x_hat = saved.payload

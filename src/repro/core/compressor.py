@@ -1,11 +1,16 @@
 """End-to-end interlayer feature-map codec (paper §III, Fig. 3/4).
 
-Two paths:
+Compatibility facade: the implementation lives in `repro.codec`, the unified
+codec dispatch layer. Every call here routes through the codec backend
+registry — pure-JAX `reference` everywhere, the fused Pallas kernels on TPU
+(force a backend with the `backend=` argument, `REPRO_CODEC_BACKEND`, or
+`repro.codec.set_default_backend`).
+
+Two paths, as before:
 
 * `compress` / `decompress` — the paper-exact pipeline:
       DCT -> min-max m-bit quant -> Q-table quant -> bitmap encode
-  and its inverse.  Fixed-shape JAX throughout (the sparse *accounting* lives
-  in encode.py); used by the CNN repro and the compression-ratio benchmarks.
+  and its inverse (sparse *accounting* lives in encode.py).
 
 * `compress_truncated` / `decompress_truncated` — the TPU runtime path
   (DESIGN.md §2): DCT -> min-max int8 -> keep only the k x k low-frequency
@@ -15,162 +20,48 @@ Two paths:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import dct as dct_lib
-from repro.core import encode as encode_lib
-from repro.core import quantize as quant_lib
-
-BLOCK = 8
-
-
-@dataclass(frozen=True)
-class CompressionPolicy:
-    """Per-layer policy (paper: 2-bit level register + compressed-layer set)."""
-
-    level: int = 1          # 0 aggressive ... 3 gentle (paper's 4 levels)
-    bits: int = 8           # step-1 integer precision m
-    enabled: bool = True
-
-    def keep(self) -> int:
-        return quant_lib.level_to_keep(self.level)
+from repro import codec as codec_lib
+from repro.codec.api import (  # noqa: F401  (re-exported compatibility names)
+    BLOCK,
+    Compressed,
+    CompressionPolicy,
+    TruncatedCompressed,
+    compression_ratio,
+)
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclass
-class Compressed:
-    """Paper-exact compressed representation of a (..., H, W) tensor."""
-
-    values: jax.Array      # (..., nh, nw, 8, 8) quantized coefficients (int32)
-    index: jax.Array       # same shape, bool
-    fmin: jax.Array
-    fmax: jax.Array
-    level: int
-    bits: int
-    orig_hw: tuple[int, int]
-
-    def tree_flatten(self):
-        return (self.values, self.index, self.fmin, self.fmax), (
-            self.level,
-            self.bits,
-            self.orig_hw,
-        )
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        values, index, fmin, fmax = children
-        level, bits, orig_hw = aux
-        return cls(values, index, fmin, fmax, level, bits, orig_hw)
-
-
-def compress(x: jax.Array, policy: CompressionPolicy) -> Compressed:
+def compress(x: jax.Array, policy: CompressionPolicy,
+             backend: str | None = None) -> Compressed:
     """Paper pipeline: pad -> blockize -> DCT -> quant x2 -> bitmap encode."""
-    *_, h, w = x.shape
-    padded, _ = dct_lib.pad_to_block(x)
-    blocks = dct_lib._blockize(padded)
-    coefs = dct_lib.dct2_blocks(blocks)
-    q2, params = quant_lib.quantize_blocks(coefs, policy.level, policy.bits)
-    enc = encode_lib.encode_blocks(q2)
-    return Compressed(
-        values=enc.values,
-        index=enc.index,
-        fmin=params.fmin,
-        fmax=params.fmax,
-        level=policy.level,
-        bits=policy.bits,
-        orig_hw=(h, w),
-    )
+    return codec_lib.paper_compress(x, policy, backend=backend)
 
 
-def decompress(c: Compressed, dtype=jnp.float32) -> jax.Array:
+def decompress(c: Compressed, dtype=jnp.float32,
+               backend: str | None = None) -> jax.Array:
     """Inverse: decode -> inverse quant x2 -> IDCT -> crop."""
-    q2 = encode_lib.decode_blocks(
-        encode_lib.EncodedBlocks(values=c.values, index=c.index)
-    )
-    params = quant_lib.QuantParams(fmin=c.fmin, fmax=c.fmax, bits=c.bits)
-    coefs = quant_lib.dequantize_blocks(q2, params, c.level)
-    x = dct_lib._unblockize(dct_lib.idct2_blocks(coefs))
-    return dct_lib.crop_from_block(x, c.orig_hw).astype(dtype)
+    return codec_lib.paper_decompress(c, dtype, backend=backend)
 
 
-def roundtrip(x: jax.Array, policy: CompressionPolicy) -> jax.Array:
+def roundtrip(x: jax.Array, policy: CompressionPolicy,
+              backend: str | None = None) -> jax.Array:
     """Lossy reconstruct — what the next layer actually consumes."""
-    return decompress(compress(x, policy), x.dtype)
+    return codec_lib.paper_roundtrip(x, policy, backend=backend)
 
 
-def compression_ratio(c: Compressed, orig_value_bits: int = 16) -> jax.Array:
-    """Paper Eq. 20: compressed bits / original bits (lower = better).
-
-    Compressed bits = 64 index bits per block + `bits` per non-zero (plus the
-    per-tensor fmin/fmax header, negligible and ignored as in the paper).
-    """
-    import numpy as np
-
-    nblocks = c.index.size // (BLOCK * BLOCK)
-    nnz = jnp.sum(c.index)
-    comp_bits = nblocks * BLOCK * BLOCK + nnz * c.bits
-    h, w = c.orig_hw
-    lead = int(np.prod(c.values.shape[:-4])) if c.values.ndim > 4 else 1
-    orig_bits = lead * h * w * orig_value_bits
-    return comp_bits / orig_bits
-
-
-# ---------------------------------------------------------------------------
-# TPU runtime path: structured frequency truncation (dense int8 carrier).
-# ---------------------------------------------------------------------------
-
-@jax.tree_util.register_pytree_node_class
-@dataclass
-class TruncatedCompressed:
-    """(..., nh, nw, k, k) int8 low-frequency corners + per-tile scale/zero."""
-
-    coefs: jax.Array       # int8
-    scale: jax.Array       # (..., nh, nw, 1, 1) f32
-    zero: jax.Array        # (..., nh, nw, 1, 1) f32  (range midpoint offset)
-    keep: int
-    orig_hw: tuple[int, int]
-
-    def tree_flatten(self):
-        return (self.coefs, self.scale, self.zero), (self.keep, self.orig_hw)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        coefs, scale, zero = children
-        keep, orig_hw = aux
-        return cls(coefs, scale, zero, keep, orig_hw)
-
-    def nbytes_per_element(self) -> float:
-        """Compressed bytes per original element (the runtime ratio)."""
-        k = self.keep
-        per_tile = k * k * 1 + 8  # int8 corner + f32 scale/zero header
-        return per_tile / (BLOCK * BLOCK)
-
-
-def compress_truncated(x: jax.Array, keep: int) -> TruncatedCompressed:
+def compress_truncated(x: jax.Array, keep: int,
+                       backend: str | None = None) -> TruncatedCompressed:
     """DCT -> per-tile symmetric int8 quant of the k x k low-frequency corner."""
-    *_, h, w = x.shape
-    padded, _ = dct_lib.pad_to_block(x)
-    blocks = dct_lib._blockize(padded)
-    coefs = dct_lib.dct2_blocks(blocks)
-    corner = coefs[..., :keep, :keep]
-    amax = jnp.max(jnp.abs(corner), axis=(-1, -2), keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(corner / scale), -127, 127).astype(jnp.int8)
-    zero = jnp.zeros_like(scale)
-    return TruncatedCompressed(coefs=q, scale=scale, zero=zero, keep=keep, orig_hw=(h, w))
+    return codec_lib.Codec(keep=keep, backend=backend).compress(x)
 
 
-def decompress_truncated(c: TruncatedCompressed, dtype=jnp.float32) -> jax.Array:
-    corner = c.coefs.astype(jnp.float32) * c.scale + c.zero
-    full = jnp.zeros((*corner.shape[:-2], BLOCK, BLOCK), jnp.float32)
-    full = full.at[..., : c.keep, : c.keep].set(corner)
-    x = dct_lib._unblockize(dct_lib.idct2_blocks(full))
-    return dct_lib.crop_from_block(x, c.orig_hw).astype(dtype)
+def decompress_truncated(c: TruncatedCompressed, dtype=jnp.float32,
+                         backend: str | None = None) -> jax.Array:
+    return codec_lib.Codec(keep=c.keep, backend=backend).decompress(c, dtype)
 
 
-def roundtrip_truncated(x: jax.Array, keep: int) -> jax.Array:
-    return decompress_truncated(compress_truncated(x, keep), x.dtype)
+def roundtrip_truncated(x: jax.Array, keep: int,
+                        backend: str | None = None) -> jax.Array:
+    return codec_lib.Codec(keep=keep, backend=backend).roundtrip(x)

@@ -86,23 +86,21 @@ def bitmap_codec_bits(x: np.ndarray, value_bits: int = 16) -> int:
 def rle_codec_bits(x: np.ndarray, value_bits: int = 16, run_bits: int = 5) -> int:
     """Run-length coding of zeros (Eyeriss-style): each non-zero is stored as
     (zero-run-length, value); runs longer than 2**run_bits-1 emit a zero value.
+
+    Vectorized over the zero-gap structure (each non-zero token is preceded by
+    floor(gap / maxrun) saturated zero tokens; a trailing zero run costs
+    ceil(run / maxrun) tokens) — a per-element Python loop crawls on
+    real-size feature maps (benchmarks/codec_compare.py).
     """
     flat = np.asarray(x).reshape(-1)
     maxrun = (1 << run_bits) - 1
-    bits = 0
-    run = 0
-    for v in flat:
-        if v == 0:
-            run += 1
-            if run == maxrun:
-                bits += run_bits + value_bits  # emit (maxrun, 0)
-                run = 0
-        else:
-            bits += run_bits + value_bits
-            run = 0
-    if run:
-        bits += run_bits + value_bits
-    return bits
+    nz_idx = np.flatnonzero(flat)
+    # zero-gap before each non-zero (first gap measured from position 0)
+    gaps = np.diff(nz_idx, prepend=-1) - 1
+    tokens = nz_idx.size + int(np.sum(gaps // maxrun))
+    tail = flat.size - (int(nz_idx[-1]) + 1 if nz_idx.size else 0)
+    tokens += -(-tail // maxrun)  # ceil: trailing zero run
+    return tokens * (run_bits + value_bits)
 
 
 def csr_codec_bits(x: np.ndarray, value_bits: int = 16) -> int:

@@ -33,44 +33,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dct as dct_lib
+from repro import codec as codec_lib
 
 BLOCK = 8
 
 
-def _dct_k(keep: int, dtype=jnp.float32) -> jax.Array:
-    """(keep, 8) top rows of the orthonormal DCT matrix."""
-    return jnp.asarray(dct_lib._dct_matrix_np(BLOCK)[:keep], dtype)
-
-
 # ---------------------------------------------------------------------------
-# Tile codec on (S, hd) planes with arbitrary leading dims
+# Tile codec on (S, hd) planes with arbitrary leading dims — thin wrappers
+# over the unified codec dispatch (reference einsum on CPU, fused Pallas on
+# TPU; override via backend=/REPRO_CODEC_BACKEND).
 # ---------------------------------------------------------------------------
 
-def compress_kv_blocks(x: jax.Array, keep: int) -> tuple[jax.Array, jax.Array]:
+def compress_kv_blocks(x: jax.Array, keep: int,
+                       backend: str | None = None) -> tuple[jax.Array, jax.Array]:
     """x: (..., S, hd) with S % 8 == 0, hd % 8 == 0.
 
     Returns (packed (..., S/8, hd/8, k, k) int8, scale (..., S/8, hd/8) f32).
     """
-    *lead, s, hd = x.shape
-    ck = _dct_k(keep)
-    t = x.reshape(*lead, s // BLOCK, BLOCK, hd // BLOCK, BLOCK)
-    t = jnp.swapaxes(t, -3, -2).astype(jnp.float32)  # (..., S/8, hd/8, 8, 8)
-    z = jnp.einsum("ua,...ab,vb->...uv", ck, t, ck)  # fused DCT + truncate
-    amax = jnp.max(jnp.abs(z), axis=(-1, -2), keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(z / scale), -127, 127).astype(jnp.int8)
-    return q, scale[..., 0, 0]
+    return codec_lib.compress_blocks(x, keep, backend=backend)
 
 
-def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16,
+                         backend: str | None = None) -> jax.Array:
     """Inverse of compress_kv_blocks -> (..., S, hd)."""
-    *lead, ns, nh, k, _ = packed.shape
-    ck = _dct_k(k)
-    z = packed.astype(jnp.float32) * scale[..., None, None]
-    t = jnp.einsum("ua,...uv,vb->...ab", ck, z, ck)  # zero-pad + IDCT fused
-    t = jnp.swapaxes(t, -3, -2)
-    return t.reshape(*lead, ns * BLOCK, nh * BLOCK).astype(dtype)
+    return codec_lib.decompress_blocks(packed, scale, out_dtype=dtype,
+                                       backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +269,29 @@ def attend_compressed(
 
     out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, H, hd)
     return out[:, None].astype(q.dtype)           # (B, 1, H, hd)
+
+
+def attend_auto(
+    q: jax.Array,
+    layer_cache: dict[str, jax.Array],
+    pos: jax.Array,
+    keep: int,
+    *,
+    kv_block: int = 1024,
+    backend: str | None = None,
+) -> jax.Array:
+    """Backend-dispatched decode attention over the compressed store.
+
+    `pallas` routes to the fused decompress+attend kernel (int8 blocks are
+    what stream from HBM; the IDCT runs in VMEM); `reference` (and any other
+    backend) uses the pure-JAX online-softmax scan above. Selection follows
+    repro.codec.dispatch, same as the block codec itself.
+    """
+    if codec_lib.resolve_backend_name(backend) == "pallas":
+        from repro.kernels.fused_attend import ops as fa_ops
+
+        return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block)
+    return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block)
 
 
 # ---------------------------------------------------------------------------

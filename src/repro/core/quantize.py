@@ -55,6 +55,11 @@ def qtable(level: int, dtype=jnp.float32) -> jax.Array:
     return jnp.asarray(qtable_for_level(level), dtype=dtype)
 
 
+def qtable_plane(level: int, r: int, c: int, dtype=jnp.float32) -> jax.Array:
+    """The 8x8 Q-table tiled to an aligned (r, c) coefficient plane."""
+    return jnp.tile(qtable(level, dtype), (r // 8, c // 8))
+
+
 @dataclass(frozen=True)
 class QuantParams:
     """Per-tensor affine range for step 1 (Eq. 7).

@@ -1,2 +1,2 @@
-"""dct8x8 kernel package."""
-from repro.kernels.dct8x8 import kernel, ops, ref
+"""dct8x8 kernel package (dispatch lives in repro.codec; ops.py shim removed)."""
+from repro.kernels.dct8x8 import kernel, ref

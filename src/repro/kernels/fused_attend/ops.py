@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import dispatch as codec_dispatch
 from repro.kernels.fused_attend.kernel import attend_compressed_plane
 
 BLOCK = 8
@@ -19,9 +20,14 @@ def attend_with_tail(
     pos: jax.Array,
     *,
     tile_s: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Kernel-backed equivalent of core.kv_cache.attend_compressed."""
+    """Kernel-backed equivalent of core.kv_cache.attend_compressed.
+
+    interpret=None auto-selects via the codec dispatch rules: compiled on
+    TPU, interpret elsewhere (CPU CI).
+    """
+    interpret = codec_dispatch.resolve_interpret(interpret)
     b, _, h, hd = q.shape
     pk = layer_cache["packed_k"]
     hkv = pk.shape[2]

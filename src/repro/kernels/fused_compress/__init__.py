@@ -1,2 +1,2 @@
-"""fused_compress kernel package."""
-from repro.kernels.fused_compress import kernel, ops, ref
+"""fused_compress kernel package (dispatch lives in repro.codec; ops.py shim removed)."""
+from repro.kernels.fused_compress import kernel, ref

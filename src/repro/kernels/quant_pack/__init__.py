@@ -1,2 +1,2 @@
-"""quant_pack kernel package."""
-from repro.kernels.quant_pack import kernel, ops, ref
+"""quant_pack kernel package (dispatch lives in repro.codec; ops.py shim removed)."""
+from repro.kernels.quant_pack import kernel, ref

@@ -13,8 +13,7 @@ BLOCK = 8
 
 
 def qtable_plane(level: int, r: int, c: int) -> jnp.ndarray:
-    qt = quant_lib.qtable(level)
-    return jnp.tile(qt, (r // BLOCK, c // BLOCK))
+    return quant_lib.qtable_plane(level, r, c)
 
 
 def quant_pack_plane(x: jnp.ndarray, fmin, fmax, level: int, bits: int = 8):

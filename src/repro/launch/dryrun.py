@@ -31,6 +31,7 @@ from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import api as model_api
 from repro.models.api import SkippedShape
+from repro.parallel import mesh as mesh_lib
 from repro.parallel import sharding as sh
 from repro.roofline import analysis as roofline
 from repro.serve import engine as serve_engine
@@ -190,7 +191,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, variant: str,
     t0 = time.time()
     try:
         fn, args, in_sh, out_sh = build_cell(api, mesh, shape_name, variant)
-        with jax.set_mesh(mesh):
+        with mesh_lib.use_mesh(mesh):
             jit_kw = {"in_shardings": in_sh}
             if out_sh is not None:
                 jit_kw["out_shardings"] = out_sh

@@ -25,6 +25,7 @@ from repro.configs.base import ARCH_IDS, get_config
 from repro.data.synthetic import TokenStream
 from repro.models import api as model_api
 from repro.optim.adamw import AdamWConfig
+from repro.parallel import mesh as mesh_lib
 from repro.runtime import fault
 from repro.train import step as train_step
 
@@ -109,7 +110,7 @@ def main(argv=None):
         start = 0
 
     batches = make_batch_fn(api, args.seq, args.batch)
-    with jax.set_mesh(mesh):
+    with mesh_lib.use_mesh(mesh):
         step_fn = train_step.jit_train_step(api, mesh, tc, state, batches(0))
 
         monitor = fault.StragglerMonitor()

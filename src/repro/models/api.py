@@ -148,6 +148,7 @@ def _whisper_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
 
     def forward(params, batch, **kw):
         kw.pop("compress_keep", None)
+        kw.pop("codec_backend", None)
         return T.encdec_forward(params, batch["frames"], batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):
@@ -160,6 +161,7 @@ def _whisper_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
 def _zamba_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
     def forward(params, batch, **kw):
         kw.pop("compress_keep", None)
+        kw.pop("codec_backend", None)
         return ssm_lib.zamba_forward(params, batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):
@@ -179,6 +181,7 @@ def _zamba_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
 def _rwkv_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
     def forward(params, batch, **kw):
         kw.pop("compress_keep", None)
+        kw.pop("codec_backend", None)
         return rwkv_lib.rwkv_forward(params, batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):

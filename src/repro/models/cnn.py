@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codec as codec_lib
 from repro.core import compressor
 
 Params = dict
@@ -137,7 +138,12 @@ def fusion_boundary(
     stats: FusionStats | None,
     value_bits: int = 16,
 ) -> jax.Array:
-    """Apply the paper codec at a fusion-layer output. NHWC -> per-channel HW planes."""
+    """Apply the paper codec at a fusion-layer output.
+
+    NHWC -> (N, C, H, W): the codec's leading-dim handling folds the whole
+    (N, C) plane batch into one backend call (fused Pallas kernels on TPU,
+    reference einsum elsewhere) — no per-plane Python loop or reshape.
+    """
     if schedule is None:
         return x
     policy = schedule.policy(idx)
@@ -147,13 +153,11 @@ def fusion_boundary(
             stats.record(idx, name, bits, bits, tuple(x.shape))
         return x
     planes = jnp.transpose(x, (0, 3, 1, 2))  # (N, C, H, W)
-    c = compressor.compress(planes, policy)
+    c = codec_lib.paper_compress(planes, policy)
     if stats is not None:
-        nblocks = c.index.size // 64
-        nnz = jnp.sum(c.index)
-        comp_bits = nblocks * 64 + nnz * policy.bits
+        comp_bits = codec_lib.paper_storage_bits(c)
         stats.record(idx, name, x.size * value_bits, comp_bits, tuple(x.shape))
-    y = compressor.decompress(c)
+    y = codec_lib.paper_decompress(c)
     return jnp.transpose(y, (0, 2, 3, 1)).astype(x.dtype)
 
 

@@ -91,7 +91,8 @@ def moe_layer(p, x, positions, cfg):
     return x
 
 
-def _wrap_remat(body, remat: str, compress_keep: int = 4):
+def _wrap_remat(body, remat: str, compress_keep: int = 4,
+                codec_backend: str | None = None):
     # both remat modes route through the custom_vjp wrapper so the per-layer
     # param cotangents are cast to bf16 BEFORE XLA's in-loop DP reduction
     # (halves gradient wire; accumulation stays f32 in the train step)
@@ -99,7 +100,8 @@ def _wrap_remat(body, remat: str, compress_keep: int = 4):
         return compressed_checkpoint(body, keep=None, grad_dtype=jnp.bfloat16)
     if remat == "compressed":
         return compressed_checkpoint(body, keep=compress_keep,
-                                     grad_dtype=jnp.bfloat16)
+                                     grad_dtype=jnp.bfloat16,
+                                     backend=codec_backend)
     return body
 
 
@@ -156,6 +158,7 @@ def forward(
     prefix_embeds: jax.Array | None = None,  # (B, P, D) modality stub
     remat: str = "full",
     compress_keep: int = 4,
+    codec_backend: str | None = None,        # ActCompress codec backend
 ) -> jax.Array:
     """Training/prefill forward -> logits (B, S_total, V)."""
     x = embed_tokens(params, tokens, cfg, prefix_embeds)
@@ -168,7 +171,7 @@ def forward(
             positions = jnp.arange(h.shape[1])[None, :]
             return body(p, h, positions, cfg)
 
-        wrapped = _wrap_remat(layer_body, remat, compress_keep)
+        wrapped = _wrap_remat(layer_body, remat, compress_keep, codec_backend)
 
         def step(h, p):
             return wrapped(p, h), None

@@ -25,6 +25,18 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def use_mesh(mesh: Mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    `jax.set_mesh` only exists on newer jax; on the pinned 0.4.x a `Mesh`
+    is itself the legacy global-mesh context manager with the same effect
+    for jit + NamedSharding use here.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -49,8 +49,13 @@ def decode_step_compressed(
     cfg,
     *,
     kv_block: int = 1024,
+    codec_backend: str | None = None,
 ) -> tuple[jax.Array, kvc.CompressedKVCache]:
-    """One-token decode against the DCT-compressed KV store."""
+    """One-token decode against the DCT-compressed KV store.
+
+    Attention and the block codec dispatch through repro.codec: the fused
+    decompress+attend Pallas kernel on TPU, the pure-JAX scan elsewhere.
+    """
     assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
     keep = cache.keep
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
@@ -66,7 +71,8 @@ def decode_step_compressed(
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
         lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep)
-        attn = kvc.attend_compressed(q, lc2, pos, keep, kv_block=kv_block)
+        attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
+                               backend=codec_backend)
         h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
         if "moe" in p:
             h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
@@ -155,6 +161,7 @@ class ServeConfig:
     temperature: float = 0.0     # 0 => greedy
     eos_id: int = -1             # -1 => never stops early
     kv_block: int = 1024
+    codec_backend: str | None = None  # None = auto (repro.codec.dispatch)
 
 
 def make_steps(api: ModelAPI, sc: ServeConfig):
@@ -169,7 +176,8 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
 
         def decode_fn(params, token, cache, pos):
             return decode_step_compressed(params, token, cache, pos, cfg,
-                                          kv_block=sc.kv_block)
+                                          kv_block=sc.kv_block,
+                                          codec_backend=sc.codec_backend)
 
         cache_init = lambda b: kvc.init_compressed_cache(cfg, b, sc.max_seq, sc.kv_keep)
         return prefill_fn, decode_fn, cache_init

@@ -39,6 +39,8 @@ class TrainConfig:
     microbatches: int = 1
     remat: str = "full"            # none | full | compressed (ActCompress)
     compress_keep: int = 4         # ActCompress kept corner k
+    codec_backend: Any = None      # ActCompress codec backend override
+                                   # (None = auto per repro.codec.dispatch)
     grad_compress: bool = False    # cross-pod DCT gradient exchange
     grad_compress_keep: int = 5
     grad_reduce_dtype: Any = jnp.bfloat16  # wire dtype of per-microbatch
@@ -114,7 +116,8 @@ def make_train_step(api: ModelAPI, mesh: Mesh, tc: TrainConfig):
 
     def loss_fn(params, mb):
         loss, metrics = api.loss(params, mb, remat=tc.remat,
-                                 compress_keep=tc.compress_keep)
+                                 compress_keep=tc.compress_keep,
+                                 codec_backend=tc.codec_backend)
         return loss, metrics
 
     def accumulate_grads(params, batch):

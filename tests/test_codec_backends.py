@@ -1,0 +1,212 @@
+"""Backend parity tests for the unified codec layer (repro.codec).
+
+Pins the contract the dispatch refactor relies on: the `reference` (pure-JAX
+einsum) and `pallas` (fused kernels, interpret mode on CPU) backends agree
+bitwise on packed int8 output and within tolerance after roundtrip, across
+non-square, padded (non-8-aligned), and batched-leading-dim shapes — so
+flipping the default backend on TPU cannot change results beyond float
+noise.  Runs without hypothesis (plain parametrize) so CI always covers it.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codec
+
+BACKENDS = ("reference", "pallas")
+
+# non-square, unaligned (forces edge padding), and batched-leading-dim shapes
+SHAPES = [(16, 16), (24, 16), (40, 264), (13, 21), (30, 17),
+          (3, 24, 16), (2, 5, 16, 32), (2, 3, 11, 19)]
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# --------------------------- truncated scheme -------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("keep", [2, 4, 8])
+def test_truncated_packed_parity(shape, keep):
+    """Backends agree bitwise on the packed int8 coefficients and scales."""
+    x = _rand(shape, seed=sum(shape) + keep)
+    cr = codec.compress(x, keep, backend="reference")
+    cp = codec.compress(x, keep, backend="pallas")
+    assert cr.coefs.shape == cp.coefs.shape and cr.coefs.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(cr.coefs), np.asarray(cp.coefs))
+    np.testing.assert_array_equal(np.asarray(cr.scale), np.asarray(cp.scale))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("keep", [2, 4, 8])
+def test_truncated_roundtrip_parity(shape, keep):
+    x = _rand(shape, seed=sum(shape) + keep + 1)
+    yr = codec.roundtrip(x, keep, backend="reference")
+    yp = codec.roundtrip(x, keep, backend="pallas")
+    assert yr.shape == x.shape and yp.shape == x.shape
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yp), atol=1e-5)
+    if keep == 8:  # full corner: int8 quantization error only
+        assert float(jnp.max(jnp.abs(yr - x))) < 0.35
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_cross_backend_decompress(backend):
+    """A container compressed on one backend decompresses on the other."""
+    other = "pallas" if backend == "reference" else "reference"
+    x = _rand((3, 24, 16), seed=7)
+    c = codec.compress(x, 4, backend=backend)
+    ya = codec.decompress(c, backend=backend)
+    yb = codec.decompress(c, backend=other)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), atol=1e-5)
+
+
+def test_blocks_layer_shapes_and_parity():
+    x = _rand((2, 5, 16, 32), seed=9)
+    qr, sr = codec.compress_blocks(x, 4, backend="reference")
+    qp, sp = codec.compress_blocks(x, 4, backend="pallas")
+    assert qr.shape == (2, 5, 2, 4, 4, 4) and qr.dtype == jnp.int8
+    assert sr.shape == (2, 5, 2, 4)
+    np.testing.assert_array_equal(np.asarray(qr), np.asarray(qp))
+    yr = codec.decompress_blocks(qr, sr, backend="reference")
+    yp = codec.decompress_blocks(qp, sp, backend="pallas")
+    assert yr.shape == x.shape
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yp), atol=1e-5)
+
+
+def test_unaligned_plane_rejected_at_blocks_layer():
+    with pytest.raises(ValueError):
+        codec.compress_blocks(_rand((13, 16)), 4)
+
+
+# ----------------------------- paper scheme ---------------------------------
+
+@pytest.mark.parametrize("level", [0, 1, 2, 3])
+def test_paper_scheme_parity(level):
+    x = _rand((3, 24, 16), seed=40 + level)
+    pol = codec.CompressionPolicy(level=level)
+    cr = codec.paper_compress(x, pol, backend="reference")
+    cp = codec.paper_compress(x, pol, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(cr.values), np.asarray(cp.values))
+    np.testing.assert_array_equal(np.asarray(cr.index), np.asarray(cp.index))
+    yr = codec.paper_decompress(cr, backend="reference")
+    yp = codec.paper_decompress(cp, backend="pallas")
+    assert yr.shape == x.shape
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yp), atol=1e-5)
+    r = float(codec.compression_ratio(cr))
+    assert 0.0 < r  # accounting stays well-defined on both backends
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dct_idct_roundtrip(backend):
+    x = _rand((4, 16, 24), seed=11)
+    z = codec.dct2(x, backend=backend)
+    back = codec.idct2(z, backend=backend)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+def test_quant_pack_parity():
+    x = _rand((32, 64), seed=12) * 10.0
+    fmin, fmax = float(jnp.min(x)), float(jnp.max(x))
+    qr, ir, nr = codec.quant_pack(x, fmin, fmax, level=1, backend="reference")
+    qp_, ip, np_ = codec.quant_pack(x, fmin, fmax, level=1, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(qr), np.asarray(qp_))
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ip))
+    assert int(nr) == int(np_)
+
+
+# --------------------------- dispatch policy --------------------------------
+
+def test_auto_selection_on_cpu_is_reference():
+    assert jax.default_backend() != "tpu"  # CI precondition
+    assert codec.resolve_backend_name(None) == "reference"
+    assert codec.resolve_backend_name("pallas") == "pallas"
+
+
+def test_env_override(monkeypatch):
+    monkeypatch.setenv(codec.dispatch.ENV_BACKEND, "pallas")
+    assert codec.resolve_backend_name(None) == "pallas"
+    monkeypatch.delenv(codec.dispatch.ENV_BACKEND)
+    assert codec.resolve_backend_name(None) == "reference"
+
+
+def test_set_default_backend_override():
+    codec.set_default_backend("pallas")
+    try:
+        assert codec.resolve_backend_name(None) == "pallas"
+        x = _rand((16, 16), seed=13)
+        y = codec.roundtrip(x, 8)  # runs the pallas (interpret) path
+        assert y.shape == x.shape
+    finally:
+        codec.set_default_backend(None)
+    assert codec.resolve_backend_name(None) == "reference"
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(KeyError):
+        codec.get_backend("no_such_backend")
+    with pytest.raises(KeyError):
+        codec.set_default_backend("no_such_backend")
+
+
+def test_interpret_resolution():
+    # auto: interpret everywhere but TPU; env forces either way
+    assert codec.resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert codec.resolve_interpret(True) is True
+    assert codec.resolve_interpret(False) is False
+    os.environ[codec.dispatch.ENV_INTERPRET] = "0"
+    try:
+        assert codec.resolve_interpret(None) is False
+    finally:
+        del os.environ[codec.dispatch.ENV_INTERPRET]
+
+
+# ------------------------ consumer-facing contracts -------------------------
+
+def test_storage_stats_accounting():
+    x = _rand((16, 16), seed=14)
+    c = codec.compress(x, 4)
+    stats = codec.storage_stats(c)
+    # 4 tiles * (16 int8 + 8 header bytes) vs 256 elements * 2 B
+    assert abs(stats["bytes_per_element"] - 24 / 64) < 1e-9
+    assert abs(stats["ratio"] - (4 * (16 * 8 + 64)) / (256 * 16)) < 1e-9
+
+
+def test_gradient_flows_through_reference_backend():
+    x = _rand((16, 16), seed=15)
+
+    def loss(a):
+        return jnp.sum(codec.roundtrip(a, 4, backend="reference") ** 2)
+
+    g = jax.grad(loss)(x)
+    assert g.shape == x.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_compressor_facade_routes_through_codec():
+    from repro.core import compressor
+
+    x = _rand((24, 16), seed=16)
+    c = compressor.compress_truncated(x, keep=4)
+    assert isinstance(c, codec.TruncatedCompressed)
+    assert c.coefs.dtype == jnp.int8 and c.coefs.shape[-2:] == (4, 4)
+    assert abs(c.nbytes_per_element() - 24 / 64) < 1e-9
+    y = compressor.decompress_truncated(c)
+    assert y.shape == x.shape
+    pol = compressor.CompressionPolicy(level=1)
+    assert isinstance(compressor.compress(x, pol), codec.Compressed)
+
+
+def test_kv_blocks_route_through_codec():
+    from repro.core import kv_cache as KV
+
+    x = _rand((2, 32, 16), seed=17)
+    q, s = KV.compress_kv_blocks(x, 4)
+    qc, sc = codec.compress_blocks(x, 4)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qc))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sc))
+    back = KV.decompress_kv_blocks(q, s, jnp.float32)
+    assert back.shape == x.shape

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 import scipy.fft
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.ckpt import store
+from repro.parallel import mesh as mesh_lib
 from repro.data.synthetic import TokenStream
 from repro.models import api as model_api
 from repro.optim.adamw import AdamWConfig
@@ -32,7 +33,7 @@ def test_resume_with_new_mesh_geometry(tmp_path, setup):
     # phase 1: "old fleet"
     mesh1 = jax.make_mesh((1, 1), ("data", "model"))
     state = train_step.init_train_state(api, tc)
-    with jax.set_mesh(mesh1):
+    with mesh_lib.use_mesh(mesh1):
         step1 = jax.jit(train_step.make_train_step(api, mesh1, tc))
         for i in range(4):
             b = {k: jnp.asarray(v) for k, v in ts.batch(i).items()}
@@ -51,7 +52,7 @@ def test_resume_with_new_mesh_geometry(tmp_path, setup):
     assert int(restored["step"]) == 4
 
     losses = []
-    with jax.set_mesh(mesh2):
+    with mesh_lib.use_mesh(mesh2):
         step2 = jax.jit(train_step.make_train_step(api, mesh2, tc))
         for i in range(4, 12):
             b = {k: jnp.asarray(v) for k, v in ts.batch(i).items()}

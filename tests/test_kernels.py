@@ -1,5 +1,8 @@
-"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracles.
+"""Per-kernel allclose tests: the `pallas` codec backend (interpret mode on
+CPU) vs the pure-jnp oracles in kernels/*/ref.py.
 
+All kernel access goes through `repro.codec` — the backend registry owns
+interpret-mode selection and plane folding; tests pick the backend by name.
 Sweeps shapes/dtypes per the kernel CI contract; hypothesis drives random
 shape/seed combinations on top of the fixed sweep.
 """
@@ -7,15 +10,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro import codec
 from repro.core import compressor
-from repro.kernels.dct8x8 import ops as dct_ops
+from repro.core import dct as dct_lib
 from repro.kernels.dct8x8 import ref as dct_ref
-from repro.kernels.fused_compress import ops as fc_ops
 from repro.kernels.fused_compress import ref as fc_ref
-from repro.kernels.quant_pack import ops as qp_ops
 from repro.kernels.quant_pack import ref as qp_ref
 
 SHAPES = [(8, 8), (8, 128), (64, 64), (128, 128), (40, 264), (256, 136)]
@@ -27,13 +30,19 @@ def _rand(shape, dtype, seed):
     return jnp.asarray(rng.standard_normal(shape), dtype)
 
 
+def _to_blocks(packed, scale, keep):
+    """Plane-packed ref output (R*k/8, C*k/8) -> codec blocks (nh, nw, k, k)."""
+    nh, nw = scale.shape
+    return jnp.swapaxes(packed.reshape(nh, keep, nw, keep), 1, 2)
+
+
 # ------------------------------ dct8x8 -------------------------------------
 
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_dct_kernel_matches_ref(shape, dtype):
     x = _rand(shape, dtype, 0)
-    got = dct_ops.dct2(x, interpret=True)
+    got = codec.dct2(x, backend="pallas")
     want = dct_ref.dct2_plane(x)
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(
@@ -44,14 +53,14 @@ def test_dct_kernel_matches_ref(shape, dtype):
 @pytest.mark.parametrize("shape", SHAPES)
 def test_idct_kernel_matches_ref(shape):
     z = _rand(shape, jnp.float32, 1)
-    got = dct_ops.idct2(z, interpret=True)
+    got = codec.idct2(z, backend="pallas")
     want = dct_ref.idct2_plane(z)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
 def test_dct_kernel_batched():
     x = _rand((3, 16, 32), jnp.float32, 2)
-    got = dct_ops.dct2(x, interpret=True)
+    got = codec.dct2(x, backend="pallas")
     want = jnp.stack([dct_ref.dct2_plane(x[i]) for i in range(3)])
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
@@ -64,8 +73,8 @@ def test_dct_kernel_batched():
 )
 def test_dct_idct_kernel_roundtrip(nh, nw, seed):
     x = _rand((nh * 8, nw * 8), jnp.float32, seed)
-    z = dct_ops.dct2(x, interpret=True)
-    back = dct_ops.idct2(z, interpret=True)
+    z = codec.dct2(x, backend="pallas")
+    back = codec.idct2(z, backend="pallas")
     np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
 
 
@@ -75,12 +84,13 @@ def test_dct_idct_kernel_roundtrip(nh, nw, seed):
 @pytest.mark.parametrize("keep", [2, 4, 6, 8])
 def test_fused_compress_matches_ref(shape, keep):
     x = _rand(shape, jnp.float32, 3)
-    packed, scale = fc_ops.compress(x, keep, interpret=True)
-    rp, rs = fc_ref.compress_plane(x, keep)
+    padded, _ = dct_lib.pad_to_block(x)
+    q, scale = codec.compress_blocks(padded, keep, backend="pallas")
+    rp, rs = fc_ref.compress_plane(padded, keep)
     np.testing.assert_allclose(np.asarray(scale), np.asarray(rs), rtol=1e-6)
     # int8 codes may differ by 1 ulp at exact rounding ties — allow off-by-one
     diff = np.abs(
-        np.asarray(packed, np.int32) - np.asarray(rp, np.int32)
+        np.asarray(q, np.int32) - np.asarray(_to_blocks(rp, rs, keep), np.int32)
     )
     assert diff.max() <= 1
     assert (diff > 0).mean() < 0.01
@@ -91,8 +101,11 @@ def test_fused_compress_matches_ref(shape, keep):
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_fused_decompress_matches_ref(shape, keep, dtype):
     x = _rand(shape, jnp.float32, 4)
-    packed, scale = fc_ref.compress_plane(x, keep)
-    got = fc_ops.decompress(packed, scale, keep, out_dtype=dtype, interpret=True)
+    padded, _ = dct_lib.pad_to_block(x)
+    packed, scale = fc_ref.compress_plane(padded, keep)
+    got = codec.decompress_blocks(
+        _to_blocks(packed, scale, keep), scale, out_dtype=dtype, backend="pallas"
+    )
     want = fc_ref.decompress_plane(packed, scale, keep, dtype=dtype)
     np.testing.assert_allclose(
         np.asarray(got, np.float32),
@@ -106,9 +119,8 @@ def test_fused_kernel_consistent_with_compressor():
     rng = np.random.default_rng(5)
     x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
     keep = 4
-    packed, scale = fc_ops.compress(x, keep, interpret=True)
-    y_kernel = fc_ops.decompress(packed, scale, keep, interpret=True)
-    y_ref = compressor.roundtrip_truncated(x, keep)
+    y_kernel = codec.roundtrip(x, keep, backend="pallas")
+    y_ref = compressor.roundtrip_truncated(x, keep, backend="reference")
     np.testing.assert_allclose(
         np.asarray(y_kernel), np.asarray(y_ref), atol=2e-2
     )
@@ -116,10 +128,10 @@ def test_fused_kernel_consistent_with_compressor():
 
 def test_fused_compress_batched_shapes():
     x = _rand((2, 5, 16, 32), jnp.float32, 6)
-    packed, scale = fc_ops.compress(x, 4, interpret=True)
-    assert packed.shape == (2, 5, 8, 16) and packed.dtype == jnp.int8
+    q, scale = codec.compress_blocks(x, 4, backend="pallas")
+    assert q.shape == (2, 5, 2, 4, 4, 4) and q.dtype == jnp.int8
     assert scale.shape == (2, 5, 2, 4)
-    y = fc_ops.decompress(packed, scale, 4, interpret=True)
+    y = codec.decompress_blocks(q, scale, backend="pallas")
     assert y.shape == x.shape
 
 
@@ -133,8 +145,7 @@ def test_fused_compress_batched_shapes():
 def test_fused_roundtrip_error_bound(nh, nw, keep, seed):
     """keep=8 roundtrip == int8 quantization error only; k<8 bounded energy loss."""
     x = _rand((nh * 8, nw * 8), jnp.float32, seed)
-    packed, scale = fc_ops.compress(x, keep, interpret=True)
-    y = fc_ops.decompress(packed, scale, keep, interpret=True)
+    y = codec.roundtrip(x, keep, backend="pallas")
     assert np.all(np.isfinite(np.asarray(y)))
     if keep == 8:
         # |err| <= scale/2 per coefficient; scale <= max|coef|/127
@@ -147,10 +158,11 @@ def test_fused_roundtrip_error_bound(nh, nw, keep, seed):
 @pytest.mark.parametrize("level", [0, 1, 2, 3])
 def test_quant_pack_matches_ref(shape, level):
     x = _rand(shape, jnp.float32, 7) * 10.0
-    fmin = float(jnp.min(x))
-    fmax = float(jnp.max(x))
-    q2, idx, nnz = qp_ops.quant_pack(x, fmin, fmax, level=level, interpret=True)
-    rq2, ridx, rnnz = qp_ref.quant_pack_plane(x, fmin, fmax, level)
+    padded, _ = dct_lib.pad_to_block(x)
+    fmin = float(jnp.min(padded))
+    fmax = float(jnp.max(padded))
+    q2, idx, nnz = codec.quant_pack(padded, fmin, fmax, level=level, backend="pallas")
+    rq2, ridx, rnnz = qp_ref.quant_pack_plane(padded, fmin, fmax, level)
     np.testing.assert_array_equal(np.asarray(q2), np.asarray(rq2))
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
     assert int(nnz) == int(rnnz)
@@ -161,7 +173,7 @@ def test_quant_pack_bits_sweep(bits):
     x = _rand((32, 64), jnp.float32, 8) * 3.0
     fmin = float(jnp.min(x))
     fmax = float(jnp.max(x))
-    q2, idx, nnz = qp_ops.quant_pack(x, fmin, fmax, level=1, bits=bits, interpret=True)
+    q2, idx, nnz = codec.quant_pack(x, fmin, fmax, level=1, bits=bits, backend="pallas")
     assert int(nnz) == int(np.count_nonzero(np.asarray(q2)))
     assert int(nnz) <= x.size
 
@@ -211,6 +223,7 @@ def test_fused_attend_with_tail_matches_core():
     for t in range(30):
         lc = _kvc.update_layer(lc, ks[:, t:t+1], vs[:, t:t+1], jnp.int32(t), keep)
     q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    # interpret mode auto-resolves (CPU here) — no caller-side selection
     o_kernel = fa_ops.attend_with_tail(q, lc, jnp.int32(29), tile_s=32)
     o_core = _kvc.attend_compressed(q, lc, jnp.int32(29), keep, kv_block=32)
     np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_core), atol=1e-4)

@@ -28,14 +28,19 @@ def test_param_spec_rules(mesh):
         "moe_layers": {"moe": {"wg": jnp.zeros((4, 8, 64, 32)),
                                "router": {"w": jnp.zeros((4, 64, 8))}}},
     }
+    def norm(spec):
+        # newer jax normalizes 1-tuples to bare names; compare canonically
+        return tuple(p[0] if isinstance(p, tuple) and len(p) == 1 else p
+                     for p in spec)
+
     specs = sh.param_specs(params, mesh, fsdp=True)
-    assert specs["embed"] == P("model", ("data",))
-    assert specs["layers"]["attn"]["wq"]["w"] == P(None, ("data",), "model")
-    assert specs["layers"]["attn"]["wo"]["w"] == P(None, "model", ("data",))
-    assert specs["layers"]["mlp"]["wd"]["w"] == P(None, "model", ("data",))
-    assert specs["layers"]["ln1"]["g"] == P(None, None)
-    assert specs["moe_layers"]["moe"]["wg"] == P(None, "model", ("data",), None)
-    assert specs["moe_layers"]["moe"]["router"]["w"] == P(None, ("data",), None)
+    assert norm(specs["embed"]) == norm(P("model", ("data",)))
+    assert norm(specs["layers"]["attn"]["wq"]["w"]) == norm(P(None, ("data",), "model"))
+    assert norm(specs["layers"]["attn"]["wo"]["w"]) == norm(P(None, "model", ("data",)))
+    assert norm(specs["layers"]["mlp"]["wd"]["w"]) == norm(P(None, "model", ("data",)))
+    assert norm(specs["layers"]["ln1"]["g"]) == norm(P(None, None))
+    assert norm(specs["moe_layers"]["moe"]["wg"]) == norm(P(None, "model", ("data",), None))
+    assert norm(specs["moe_layers"]["moe"]["router"]["w"]) == norm(P(None, ("data",), None))
 
 
 def test_fit_spec_divisibility():
