@@ -1,0 +1,122 @@
+"""Serving throughput: static lock-step vs continuous batching over the
+compressed KV pool (qwen2_0_5b-shaped configs, CPU interpret mode).
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
+
+Emits benchmarks/artifacts/serve_throughput.json with tokens/s and
+slot-utilization per scheduler. The point being measured: with per-slot
+positions each pool slot is occupied exactly as long as its request lives
+(the paper's dynamic feature-map buffer allocation, serving edition), so a
+mixed workload finishes in fewer decode steps at higher slot utilization
+than the wave-at-a-time baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import api as model_api
+from repro.serve import engine as E
+
+ART = pathlib.Path(__file__).parent / "artifacts"
+
+
+def build_workload(cfg, n_requests: int, prompt_hi: int, new_hi: int, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(max(2, prompt_hi // 4), prompt_hi + 1))
+        max_new = int(rng.integers(max(2, new_hi // 4), new_hi + 1))
+        reqs.append(E.Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new=max_new))
+    return reqs
+
+
+def run_one(api, params, sc, batch, scheduler, workload_args):
+    eng = E.Engine(api, params, sc, batch=batch, scheduler=scheduler)
+    reqs = build_workload(api.cfg, *workload_args)
+    t0 = time.perf_counter()
+    done = eng.generate(reqs)
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    # first token per request comes from prefill logits, not the decode loop
+    dec_tok = st["tokens_out"] - st["requests"]
+    return {
+        "scheduler": eng.scheduler,
+        "requests": st["requests"],
+        "tokens_out": st["tokens_out"],
+        "decode_steps": st["steps"],
+        "slot_utilization": round(eng.slot_utilization(), 4),
+        "decode_s": round(st["decode_s"], 4),
+        "prefill_s": round(st["prefill_s"], 4),
+        "wall_s": round(wall, 4),
+        "decode_tok_per_s": round(dec_tok / st["decode_s"], 2) if st["steps"] else 0.0,
+        "tok_per_s": round(st["tokens_out"] / max(wall, 1e-9), 2),
+        "mean_out_len": round(float(np.mean([len(r.out_tokens) for r in done])), 2),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + workload (CI wiring check)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--kv-keep", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("qwen2_0_5b").reduced()
+    api = model_api.build("qwen2_0_5b", cfg)
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    if args.smoke:
+        n_req, prompt_hi, new_hi, max_seq = 5, 12, 6, 48
+    else:
+        n_req, prompt_hi, new_hi, max_seq = args.requests, 24, 16, 96
+
+    sc = E.ServeConfig(max_seq=max_seq, kv_compress=True, kv_keep=args.kv_keep,
+                       codec_backend="reference")
+    workload = (n_req, prompt_hi, new_hi)
+
+    rows = [run_one(api, params, sc, args.batch, sched, workload)
+            for sched in ("static", "continuous")]
+
+    stat, cont = rows
+    summary = {
+        "arch": cfg.name,
+        "batch": args.batch,
+        "kv_keep": args.kv_keep,
+        "max_seq": max_seq,
+        "smoke": bool(args.smoke),
+        "step_reduction": round(
+            1.0 - cont["decode_steps"] / max(stat["decode_steps"], 1), 4),
+        "rows": rows,
+    }
+    ART.mkdir(exist_ok=True)
+    out = ART / "serve_throughput.json"
+    out.write_text(json.dumps(summary, indent=2) + "\n")
+
+    print(f"arch={cfg.name} batch={args.batch} requests={n_req} "
+          f"kv_keep={args.kv_keep} (compressed pool)")
+    for r in rows:
+        print(f"  {r['scheduler']:<11} steps={r['decode_steps']:<4} "
+              f"slot_util={r['slot_utilization']:.2f} "
+              f"decode_tok/s={r['decode_tok_per_s']:.1f} wall={r['wall_s']:.1f}s")
+    print(f"decode-step reduction continuous vs static: "
+          f"{summary['step_reduction'] * 100:.0f}%  -> {out}")
+    # sanity for CI: both schedulers must have served every token requested
+    assert stat["requests"] == cont["requests"] == n_req
+    assert cont["tokens_out"] == stat["tokens_out"]
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,10 @@
-"""Serve a small LM with batched requests, comparing raw vs DCT-compressed
+"""Serve a small LM with continuous batching, comparing raw vs DCT-compressed
 KV cache (the paper's feature-map buffer, reinterpreted for decoding).
+
+Requests with different prompt lengths and token budgets stream through 4
+slots: a slot retires the moment its request finishes and is immediately
+re-admitted from the queue — the pool is occupied per request, like the
+paper's dynamically allocated feature-map buffer.
 
     PYTHONPATH=src python examples/serve_kv_compressed.py
 """
@@ -17,21 +22,25 @@ api = model_api.build(arch, cfg)
 params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
 rng = np.random.default_rng(0)
 
-prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32) for _ in range(3)]
+# 6 requests over 4 slots, mixed prompt lengths and budgets
+plens = [12, 5, 19, 9, 14, 7]
+budgets = [16, 6, 10, 14, 8, 12]
+prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in plens]
 
 outs = {}
 for compress in (False, True):
     sc = E.ServeConfig(max_seq=96, kv_compress=compress, kv_keep=8)
     eng = E.Engine(api, params, sc, batch=4)
-    reqs = [E.Request(uid=i, prompt=p.copy(), max_new=16)
-            for i, p in enumerate(prompts)]
+    reqs = [E.Request(uid=i, prompt=p.copy(), max_new=b)
+            for i, (p, b) in enumerate(zip(prompts, budgets))]
     done = eng.generate(reqs)
     outs[compress] = [r.out_tokens for r in done]
     label = "compressed" if compress else "raw       "
-    print(f"{label} kv: req0 tokens {outs[compress][0]}")
+    print(f"{label} kv: steps={eng.stats['steps']} "
+          f"slot_util={eng.slot_utilization():.2f} req0 tokens {outs[compress][0]}")
 
 agree = np.mean([
-    np.mean(np.asarray(a) == np.asarray(b))
+    np.mean(np.asarray(a[:len(b)]) == np.asarray(b[:len(a)]))
     for a, b in zip(outs[False], outs[True])
 ])
 print(f"\ntoken agreement raw vs keep=8 compressed cache: {agree*100:.0f}%")

@@ -88,6 +88,17 @@ class ArchConfig:
     def resolved_head_dim(self) -> int:
         return self.head_dim or (self.d_model // max(self.n_heads, 1))
 
+    @property
+    def vec_pos_decode(self) -> bool:
+        """Decode takes a per-slot (B,) position vector (continuous batching).
+
+        True for the transformer families whose cache is indexed by absolute
+        position; recurrent/hybrid families advance a state with one scalar
+        step index and are served lock-step. Single source of truth for
+        serve/engine.make_steps and ModelAPI.input_specs.
+        """
+        return self.family in ("dense", "moe", "vlm")
+
     def __post_init__(self):
         if self.head_dim == 0 and self.n_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)

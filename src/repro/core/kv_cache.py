@@ -18,7 +18,14 @@ is the same factor — that is the paper's DMA-bandwidth argument verbatim.
 
 Decode appends single tokens, which don't fill an 8-token seq block, so the
 cache keeps a RAW TAIL of up to 8 tokens; when the tail fills, the whole
-block is DCT-compressed into the packed store (lax.cond, fixed shapes).
+block is DCT-compressed into the packed store.  Positions are PER SLOT:
+`pos` is a (B,) vector (scalars broadcast), so each batch row has its own
+tail slot, its own flush decision (scatter writes with masked row indices;
+one global cond only skips the codec when no row flushes), and its own
+causal validity mask.  This is what lets the serve
+engine retire and re-admit requests slot-by-slot (continuous batching) over
+one shared compressed pool — the serving analogue of the paper's dynamic
+feature-map buffer allocation.
 Attention consumes the packed store via `attend_compressed`, which
 decompresses per KV chunk INSIDE the flash-attention scan — the HBM traffic
 for history is int8 packed + scales only, mirroring the paper's "IDCT fused
@@ -36,6 +43,19 @@ import numpy as np
 from repro import codec as codec_lib
 
 BLOCK = 8
+
+
+def as_pos_vec(pos: jax.Array | int, batch: int) -> jax.Array:
+    """Normalize a position argument to a per-slot (B,) int32 vector.
+
+    Scalars (the legacy lock-step API) broadcast to every row; (B,) vectors
+    pass through, giving each batch slot its own absolute position.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (batch,))
+    assert pos.shape == (batch,), (pos.shape, batch)
+    return pos
 
 
 # ---------------------------------------------------------------------------
@@ -125,47 +145,60 @@ def update_layer(
     layer_cache: dict[str, jax.Array],
     k_new: jax.Array,  # (B, 1, Hkv, hd)
     v_new: jax.Array,
-    pos: jax.Array,    # scalar absolute position of the new token
+    pos: jax.Array,    # (B,) per-slot absolute positions (scalar broadcasts)
     keep: int,
 ) -> dict[str, jax.Array]:
-    """Write the new token into the tail; flush the block when it fills.
+    """Write each row's new token into its own tail slot; flush per row.
 
     layer_cache keys: packed_k/scale_k/packed_v/scale_v (B, S/8, Hkv, hd/8, k, k)
     / (B, S/8, Hkv, hd/8), tail_k/tail_v (B, 8, Hkv, hd).
+
+    Every row carries its own position, so the tail write is a batched
+    scatter at slot = pos % 8, and the block flush is a masked scatter at
+    blk = pos // 8 that only lands for rows whose tail just filled (rows
+    that don't flush scatter to an out-of-range index and are dropped).
+    A single global cond skips the codec entirely on steps where NO row
+    flushes (7 of 8 steps in lock-step serving) — the per-row decision
+    stays a masked scatter either way.
     """
+    b = k_new.shape[0]
+    pos = as_pos_vec(pos, b)
+    rows = jnp.arange(b)
     slot = jnp.mod(pos, BLOCK)
-    tail_k = jax.lax.dynamic_update_slice(
-        layer_cache["tail_k"], k_new.astype(layer_cache["tail_k"].dtype), (0, slot, 0, 0)
+    tail_k = layer_cache["tail_k"].at[rows, slot].set(
+        k_new[:, 0].astype(layer_cache["tail_k"].dtype)
     )
-    tail_v = jax.lax.dynamic_update_slice(
-        layer_cache["tail_v"], v_new.astype(layer_cache["tail_v"].dtype), (0, slot, 0, 0)
+    tail_v = layer_cache["tail_v"].at[rows, slot].set(
+        v_new[:, 0].astype(layer_cache["tail_v"].dtype)
     )
+
+    ns = layer_cache["packed_k"].shape[1]
+    flush_row = slot == BLOCK - 1
 
     def flush(args):
         pk, sk, pv, sv, tk, tv = args
-        blk = pos // BLOCK
-        # (B, 8, Hkv, hd) -> (B, Hkv, 8, hd) planes -> compress
+        # (B, 8, Hkv, hd) -> (B, Hkv, 8, hd) planes -> one block per row
         qk, sck = compress_kv_blocks(jnp.swapaxes(tk, 1, 2), keep)
         qv, scv = compress_kv_blocks(jnp.swapaxes(tv, 1, 2), keep)
-        # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, 1, Hkv, hd/8, k, k)
-        qk = jnp.swapaxes(qk, 1, 2)
-        qv = jnp.swapaxes(qv, 1, 2)
-        sck = jnp.swapaxes(sck, 1, 2)
-        scv = jnp.swapaxes(scv, 1, 2)
-        pk = jax.lax.dynamic_update_slice(pk, qk, (0, blk, 0, 0, 0, 0))
-        sk = jax.lax.dynamic_update_slice(sk, sck, (0, blk, 0, 0))
-        pv = jax.lax.dynamic_update_slice(pv, qv, (0, blk, 0, 0, 0, 0))
-        sv = jax.lax.dynamic_update_slice(sv, scv, (0, blk, 0, 0))
-        return pk, sk, pv, sv
+        # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, Hkv, hd/8, k, k)
+        qk = jnp.swapaxes(qk, 1, 2)[:, 0]
+        qv = jnp.swapaxes(qv, 1, 2)[:, 0]
+        sck = jnp.swapaxes(sck, 1, 2)[:, 0]
+        scv = jnp.swapaxes(scv, 1, 2)[:, 0]
+        blk = jnp.where(flush_row, pos // BLOCK, ns)  # ns => dropped
+        return (
+            pk.at[rows, blk].set(qk, mode="drop"),
+            sk.at[rows, blk].set(sck, mode="drop"),
+            pv.at[rows, blk].set(qv, mode="drop"),
+            sv.at[rows, blk].set(scv, mode="drop"),
+        )
 
-    def keep_tail(args):
+    def no_flush(args):
         pk, sk, pv, sv, _, _ = args
         return pk, sk, pv, sv
 
     pk, sk, pv, sv = jax.lax.cond(
-        slot == BLOCK - 1,
-        flush,
-        keep_tail,
+        jnp.any(flush_row), flush, no_flush,
         (
             layer_cache["packed_k"], layer_cache["scale_k"],
             layer_cache["packed_v"], layer_cache["scale_v"],
@@ -191,7 +224,7 @@ def _repeat_heads(x: jax.Array, n_rep: int) -> jax.Array:
 def attend_compressed(
     q: jax.Array,                 # (B, 1, H, hd)
     layer_cache: dict[str, jax.Array],
-    pos: jax.Array,
+    pos: jax.Array,               # (B,) per-slot positions (scalar broadcasts)
     keep: int,
     *,
     kv_block: int = 1024,
@@ -200,10 +233,12 @@ def attend_compressed(
     """Online-softmax decode attention where K/V history is decompressed per
     chunk INSIDE the scan — compressed bytes are what stream from HBM.
 
-    The raw tail (positions pos - pos%8 .. pos) is attended separately and
+    Each row attends under its OWN causal horizon: packed blocks below that
+    row's flushed watermark, plus its raw tail (positions pos-pos%8 .. pos)
     merged with the same running-max algebra.
     """
     b, sq, h, hd = q.shape
+    pos = as_pos_vec(pos, b)
     pk = layer_cache["packed_k"]
     _, nblocks_total, hkv, nhd, k, _ = pk.shape
     n_rep = h // hkv
@@ -217,7 +252,7 @@ def attend_compressed(
     nchunks = max_seq // kv_block
 
     qf = (q.astype(jnp.float32) * scale)[:, 0]           # (B, H, hd)
-    flushed = (pos // BLOCK) * BLOCK                      # tokens in packed store
+    flushed = (pos // BLOCK) * BLOCK                      # (B,) packed watermark
 
     def chunk_body(carry, c):
         m, l, acc = carry
@@ -235,12 +270,12 @@ def attend_compressed(
         kr = _repeat_heads(kc, n_rep)                     # (B, H, kv_block, hd)
         vr = _repeat_heads(vc, n_rep)
         kv_pos = start * BLOCK + jnp.arange(kv_block)
-        valid = kv_pos < flushed                          # only flushed blocks
+        valid = kv_pos[None] < flushed[:, None]           # (B, kv_block) per row
         s = jnp.einsum("bhd,bhkd->bhk", qf, kr)
-        s = jnp.where(valid[None, None], s, -jnp.inf)
+        s = jnp.where(valid[:, None], s, -jnp.inf)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-        p = jnp.where(valid[None, None], jnp.exp(s - m_safe[..., None]), 0.0)
+        p = jnp.where(valid[:, None], jnp.exp(s - m_safe[..., None]), 0.0)
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
         l_new = l * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum("bhk,bhkd->bhd", p, vr)
@@ -256,13 +291,13 @@ def attend_compressed(
     tv = jnp.swapaxes(layer_cache["tail_v"], 1, 2).astype(jnp.float32)
     tkr = _repeat_heads(tk, n_rep)
     tvr = _repeat_heads(tv, n_rep)
-    tail_pos = flushed + jnp.arange(BLOCK)
-    tvalid = tail_pos <= pos
+    tail_pos = flushed[:, None] + jnp.arange(BLOCK)       # (B, 8)
+    tvalid = tail_pos <= pos[:, None]
     st = jnp.einsum("bhd,bhkd->bhk", qf, tkr)
-    st = jnp.where(tvalid[None, None], st, -jnp.inf)
+    st = jnp.where(tvalid[:, None], st, -jnp.inf)
     m_new = jnp.maximum(m, jnp.max(st, axis=-1))
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    pt = jnp.where(tvalid[None, None], jnp.exp(st - m_safe[..., None]), 0.0)
+    pt = jnp.where(tvalid[:, None], jnp.exp(st - m_safe[..., None]), 0.0)
     alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
     l = l * alpha + jnp.sum(pt, axis=-1)
     acc = acc * alpha[..., None] + jnp.einsum("bhk,bhkd->bhd", pt, tvr)
@@ -274,7 +309,7 @@ def attend_compressed(
 def attend_auto(
     q: jax.Array,
     layer_cache: dict[str, jax.Array],
-    pos: jax.Array,
+    pos: jax.Array,               # (B,) per-slot positions (scalar broadcasts)
     keep: int,
     *,
     kv_block: int = 1024,
@@ -285,8 +320,10 @@ def attend_auto(
     `pallas` routes to the fused decompress+attend kernel (int8 blocks are
     what stream from HBM; the IDCT runs in VMEM); `reference` (and any other
     backend) uses the pure-JAX online-softmax scan above. Selection follows
-    repro.codec.dispatch, same as the block codec itself.
+    repro.codec.dispatch, same as the block codec itself. Both backends take
+    the per-slot position vector.
     """
+    pos = as_pos_vec(pos, q.shape[0])
     if codec_lib.resolve_backend_name(backend) == "pallas":
         from repro.kernels.fused_attend import ops as fa_ops
 
@@ -302,11 +339,55 @@ def prefill_compress(
     k: jax.Array,  # (B, S, Hkv, hd), S % 8 == 0
     v: jax.Array,
     keep: int,
+    pos: jax.Array | None = None,  # (B,) per-row prompt lengths; None => S
 ) -> dict[str, jax.Array]:
-    """Compress a full prompt's K/V for one layer into cache layout."""
+    """Compress a full prompt's K/V for one layer into cache layout.
+
+    `pos[b]` is row b's prompt length (= its next decode position).  All
+    blocks are compressed unconditionally — blocks at or above a row's
+    flushed watermark (pos//8 * 8) hold padding garbage, but attention masks
+    them (`kv_pos < flushed`) and the decode flush overwrites each one
+    before it ever becomes visible.  The trailing partial block of each row
+    (positions flushed .. flushed+7) is returned raw as tail_k/tail_v, per
+    row, ready to drop into the cache's tail ring.
+
+    Invariant: tail entries at indices >= pos%8 are clamped-gather garbage
+    that `tvalid = tail_pos <= pos` treats as valid at position pos itself.
+    Decode must therefore WRITE position pos (update_layer) before attending
+    at pos — which is exactly what decode_step_compressed does; the first
+    post-prefill token is sampled from the prefill logits, never attended
+    out of this cache.
+    """
+    b, s = k.shape[:2]
+    pos = as_pos_vec(s if pos is None else pos, b)
     kq, ks = compress_kv_blocks(jnp.swapaxes(k, 1, 2), keep)  # (B,Hkv,S/8,hd/8,k,k)
     vq, vs = compress_kv_blocks(jnp.swapaxes(v, 1, 2), keep)
+    # per-row raw tail: gather rows flushed .. flushed+7 (clamped; rows past
+    # the prompt are masked at attend time by tail_pos <= pos)
+    idx = (pos[:, None] // BLOCK) * BLOCK + jnp.arange(BLOCK)  # (B, 8)
+    idx = jnp.minimum(idx, s - 1)[:, :, None, None]
+    tail_k = jnp.take_along_axis(k, idx, axis=1)               # (B, 8, Hkv, hd)
+    tail_v = jnp.take_along_axis(v, idx, axis=1)
     return dict(
         packed_k=jnp.swapaxes(kq, 1, 2), scale_k=jnp.swapaxes(ks, 1, 2),
         packed_v=jnp.swapaxes(vq, 1, 2), scale_v=jnp.swapaxes(vs, 1, 2),
+        tail_k=tail_k, tail_v=tail_v,
     )
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle (continuous batching)
+# ---------------------------------------------------------------------------
+
+def cache_reset_slot(cache, slot: jax.Array | int):
+    """Zero one batch slot's planes — axis 1 of every leaf (retirement).
+
+    Works on any cache pytree with the (L, B, ...) layout: the
+    CompressedKVCache (packed/scale/tail planes; `keep` rides as aux data)
+    and the raw k/v and MLA latent dicts alike. Freshly-admitted requests
+    overwrite the slot wholesale at prefill, so this is belt-and-braces
+    hygiene — but it keeps retired garbage out of storage-stats scans and
+    makes slot reuse auditable in tests.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, 0])), cache)

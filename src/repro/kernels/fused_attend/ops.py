@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.codec import dispatch as codec_dispatch
+from repro.core.kv_cache import as_pos_vec
 from repro.kernels.fused_attend.kernel import attend_compressed_plane
 
 BLOCK = 8
@@ -17,21 +18,24 @@ BLOCK = 8
 def attend_with_tail(
     q: jax.Array,                 # (B, 1, H, hd)
     layer_cache: dict,            # per-layer compressed cache slices
-    pos: jax.Array,
+    pos: jax.Array,               # (B,) per-slot positions (scalar broadcasts)
     *,
     tile_s: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Kernel-backed equivalent of core.kv_cache.attend_compressed.
 
-    interpret=None auto-selects via the codec dispatch rules: compiled on
-    TPU, interpret elsewhere (CPU CI).
+    `pos` is a per-slot vector: the batch vmap maps it alongside the cache
+    planes, so every row's kernel invocation masks against that row's own
+    flushed watermark. interpret=None auto-selects via the codec dispatch
+    rules: compiled on TPU, interpret elsewhere (CPU CI).
     """
     interpret = codec_dispatch.resolve_interpret(interpret)
     b, _, h, hd = q.shape
     pk = layer_cache["packed_k"]
     hkv = pk.shape[2]
     n_rep = h // hkv
+    pos = as_pos_vec(pos, b)
 
     # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
     def plane_axes(x):
@@ -41,26 +45,26 @@ def attend_with_tail(
 
     kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
                              interpret=interpret)
-    # vmap over batch then kv-head
+    # vmap over batch (pos mapped: per-slot horizon) then kv-head (shared pos)
     acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
-                         in_axes=(0, 0, 0, 0, 0, None))(
+                         in_axes=(0, 0, 0, 0, 0, 0))(
         plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
         plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
         qg, pos,
     )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
 
-    # ---- merge the raw tail (positions pos//8*8 .. pos) -------------------
+    # ---- merge the raw tail (positions pos//8*8 .. pos, per row) ----------
     tk = jnp.swapaxes(layer_cache["tail_k"], 1, 2).astype(jnp.float32)  # (B,Hkv,8,hd)
     tv = jnp.swapaxes(layer_cache["tail_v"], 1, 2).astype(jnp.float32)
     qf = qg.astype(jnp.float32) / np.sqrt(hd)
     st = jnp.einsum("bgrd,bgtd->bgrt", qf, tk)          # (B, Hkv, rep, 8)
     flushed = (pos // BLOCK) * BLOCK
-    tail_pos = flushed + jnp.arange(BLOCK)
-    tvalid = tail_pos <= pos
-    st = jnp.where(tvalid[None, None, None], st, -jnp.inf)
+    tail_pos = flushed[:, None] + jnp.arange(BLOCK)     # (B, 8)
+    tvalid = (tail_pos <= pos[:, None])[:, None, None]  # (B, 1, 1, 8)
+    st = jnp.where(tvalid, st, -jnp.inf)
     m_new = jnp.maximum(m, jnp.max(st, axis=-1, keepdims=True))
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    pt = jnp.where(tvalid[None, None, None], jnp.exp(st - m_safe), 0.0)
+    pt = jnp.where(tvalid, jnp.exp(st - m_safe), 0.0)
     alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
     l2 = l * alpha + jnp.sum(pt, axis=-1, keepdims=True)
     acc2 = acc * alpha + jnp.einsum("bgrt,bgtd->bgrd", pt, tv)

@@ -113,7 +113,7 @@ def build_cell(api, mesh, shape_name: str, variant: str):
     tspec = sh.data_batch_spec(axes, 1, dim0=token.shape[0], mesh=mesh)
 
     if variant == "compressed" and cfg.attn_type == "gqa" \
-            and cfg.family in ("dense", "moe", "vlm") \
+            and cfg.vec_pos_decode \
             and cfg.resolved_head_dim % 8 == 0:
         # KVCompress: the int8 DCT store replaces the raw cache
         seq, batch_size, _ = SHAPES[shape_name]

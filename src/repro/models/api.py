@@ -95,12 +95,15 @@ class ModelAPI:
                 if kind == "train":
                     specs["labels"] = sds((b, s), i32)
             return specs
-        # decode: one token + cache of length s
+        # decode: one token + cache of length s; pos is PER SLOT (B,) — the
+        # continuous-batching serve path (scalars still broadcast for the
+        # recurrent families' scalar step index)
         cache = jax.eval_shape(lambda: self.init_cache(b, s, dtype))
+        pos_shape = (b,) if self.cfg.vec_pos_decode else ()
         return {
             "token": sds((b,), i32),
             "cache": cache,
-            "pos": sds((), i32),
+            "pos": sds(pos_shape, i32),
         }
 
 

@@ -196,8 +196,8 @@ def decode_attention(
     q: jax.Array,           # (B, 1, H, hd)
     k: jax.Array,           # (B, S, Hkv, hd)   S-sharded cache friendly
     v: jax.Array,           # (B, S, Hkv, hd_v)
-    pos: jax.Array,         # scalar: current position (attend to <= pos)
-    *,
+    pos: jax.Array,         # (B,) per-slot positions (scalar broadcasts):
+    *,                      # row b attends to <= pos[b]
     scale: float | None = None,
 ) -> jax.Array:
     """Single-shot decode attention (no KV-chunk scan).
@@ -220,8 +220,9 @@ def decode_attention(
     qg = (q[:, 0] * scale).astype(k.dtype).reshape(b, hkv, n_rep, hd)
     sc = jnp.einsum("bgrd,bsgd->bgrs", qg, k,
                     preferred_element_type=jnp.float32)  # (B, Hkv, rep, S)
-    valid = jnp.arange(s) <= pos
-    sc = jnp.where(valid[None, None, None], sc, -jnp.inf)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    valid = jnp.arange(s)[None] <= posv[:, None]         # (B, S) per-row horizon
+    sc = jnp.where(valid[:, None, None], sc, -jnp.inf)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -389,8 +390,9 @@ def mla_decode_attention(p, x, positions, cfg, c_kv, k_rope, pos):
                          preferred_element_type=jnp.float32)
     sc = sc / np.sqrt(nope + rope)
     skv = c_kv.shape[1]
-    valid = jnp.arange(skv) <= pos
-    sc = jnp.where(valid[None, None, None], sc, -jnp.inf)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    valid = jnp.arange(skv)[None] <= posv[:, None]       # (B, S) per-row horizon
+    sc = jnp.where(valid[:, None, None], sc, -jnp.inf)
     prob = jax.nn.softmax(sc, axis=-1)
     o_lat = jnp.einsum("bhqs,bsr->bqhr", prob.astype(c_kv.dtype), c_kv,
                        preferred_element_type=jnp.float32)

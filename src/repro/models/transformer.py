@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kv_cache as kvc
 from repro.core.activation import compressed_checkpoint
 from repro.models import layers as L
 from repro.parallel.sharding import logical as shard_hint
@@ -269,24 +270,39 @@ def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Params:
     }
 
 
+def scatter_cache_token(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write `new` (B, 1, ...) at per-row position `pos` (B,) on buf's axis 1.
+
+    Out-of-range positions (idle serve slots parked past max_seq) drop
+    silently rather than clamp-overwriting live history.
+    """
+    b = buf.shape[0]
+    return buf.at[jnp.arange(b), pos].set(new[:, 0].astype(buf.dtype), mode="drop")
+
+
 def decode_step(
     params: Params,
     token: jax.Array,        # (B,) int32 — current token
     cache: Params,
-    pos: jax.Array,          # scalar int32 — write position (same for batch)
-    cfg,
+    pos: jax.Array,          # (B,) int32 per-slot write positions
+    cfg,                     # (scalar broadcasts — legacy lock-step batching)
     *,
     kv_block: int = 1024,
     unroll: bool = False,
 ) -> tuple[jax.Array, Params]:
     """One-token decode against a raw KV cache. Returns (logits (B, V), cache).
 
+    Each batch row writes its K/V at its own `pos[b]` and attends under its
+    own causal horizon, so rows at different depths share one decode step —
+    the raw-cache side of continuous batching.
+
     unroll=True unrolls the layer loop: cache xs/ys indices become STATIC, so
     XLA emits true in-place per-layer updates instead of the masked-select
     full-cache rewrite a dynamic layer index forces (§Perf, decode cells).
     """
+    pos = kvc.as_pos_vec(pos, token.shape[0])
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)  # (B, 1, D)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    positions = pos[:, None]  # (B, 1) per-row rope positions
     norm = _norm(cfg)
 
     def layer_step(carry, inp):
@@ -297,12 +313,8 @@ def decode_step(
         hd = cfg.resolved_head_dim
         if cfg.attn_type == "mla":
             c_kv_new, k_rope_new = L.mla_latent(p["attn"], hn, positions, cfg)
-            c_kv = jax.lax.dynamic_update_slice(
-                cache_slice["c_kv"], c_kv_new.astype(cache_slice["c_kv"].dtype), (0, pos, 0)
-            )
-            k_rope = jax.lax.dynamic_update_slice(
-                cache_slice["k_rope"], k_rope_new.astype(cache_slice["k_rope"].dtype), (0, pos, 0)
-            )
+            c_kv = scatter_cache_token(cache_slice["c_kv"], c_kv_new, pos)
+            k_rope = scatter_cache_token(cache_slice["k_rope"], k_rope_new, pos)
             # weight-absorbed latent-space attention (no per-step KV up-proj)
             attn_out = L.mla_decode_attention(
                 p["attn"], hn, positions, cfg, c_kv, k_rope, pos
@@ -310,12 +322,8 @@ def decode_step(
             new_cache = {"c_kv": c_kv, "k_rope": k_rope}
         else:
             k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
-            k = jax.lax.dynamic_update_slice(
-                cache_slice["k"], k_new.astype(cache_slice["k"].dtype), (0, pos, 0, 0)
-            )
-            v = jax.lax.dynamic_update_slice(
-                cache_slice["v"], v_new.astype(cache_slice["v"].dtype), (0, pos, 0, 0)
-            )
+            k = scatter_cache_token(cache_slice["k"], k_new, pos)
+            v = scatter_cache_token(cache_slice["v"], v_new, pos)
             q = L.dense(p["attn"]["wq"], hn).reshape(b, 1, cfg.n_heads, hd)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             out_h = L.decode_attention(q, k, v, pos)  # single-shot (no chunk scan)

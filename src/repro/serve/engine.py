@@ -1,13 +1,25 @@
-"""Serving engine: batched prefill + decode with raw or DCT-compressed KV.
+"""Serving engine: continuous batching with raw or DCT-compressed KV.
 
 Layers:
-  * `make_prefill` / `make_decode` — jit-able pure step functions (these are
-    what the multi-pod dry-run lowers for the decode_* shapes).
-  * `decode_step_compressed` — the KVCompress decode path: per layer the new
-    token's K/V goes into an 8-token raw tail; full blocks are flushed to the
-    int8 DCT store; attention streams the compressed store (core/kv_cache.py).
-  * `Engine` — static-batch request server: admits up to `batch` requests,
-    prefills the batch, decodes until every slot hits EOS/max_new, retires.
+  * `make_steps` — jit-able pure step functions (prefill / decode / cache
+    init) plus a `vec_pos` capability flag: transformer families thread a
+    PER-SLOT position vector (B,) through decode, so every batch slot runs
+    at its own depth.
+  * `decode_step_compressed` — the KVCompress decode path: per layer each
+    slot's new K/V goes into its own 8-token raw tail; full blocks flush to
+    the int8 DCT store; attention streams the compressed store under each
+    slot's causal horizon (core/kv_cache.py).
+  * `Engine` — continuous-batching request server: admission queue, per-slot
+    single-request prefill into a free slot, per-slot retirement on
+    EOS/max_new, immediate re-admission. Live slots are never re-prefilled.
+    `scheduler="static"` (and families without per-slot positions — the
+    recurrent ones, where a scalar step index drives a state, not a cache)
+    falls back to wave-at-a-time lock-step batching.
+
+The compressed pool is the serving analogue of the paper's dynamically
+allocated feature-map buffer: slots are occupied exactly as long as their
+request lives, instead of the whole batch being provisioned for the slowest
+request.
 
 MLA (deepseek-v2) keeps its raw latent cache: the latent IS a learned
 compression (kv_lora 512 vs 2*128*128 per token = 64x); stacking a fixed DCT
@@ -18,7 +30,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +57,7 @@ def decode_step_compressed(
     params: Params,
     token: jax.Array,       # (B,)
     cache: kvc.CompressedKVCache,
-    pos: jax.Array,         # scalar
+    pos: jax.Array,         # (B,) per-slot positions (scalar broadcasts)
     cfg,
     *,
     kv_block: int = 1024,
@@ -53,13 +65,16 @@ def decode_step_compressed(
 ) -> tuple[jax.Array, kvc.CompressedKVCache]:
     """One-token decode against the DCT-compressed KV store.
 
-    Attention and the block codec dispatch through repro.codec: the fused
-    decompress+attend Pallas kernel on TPU, the pure-JAX scan elsewhere.
+    Every slot writes its token at its own `pos[b]` (own tail slot, own
+    flush) and attends under its own watermark. Attention and the block
+    codec dispatch through repro.codec: the fused decompress+attend Pallas
+    kernel on TPU, the pure-JAX scan elsewhere.
     """
     assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
     keep = cache.keep
+    pos = kvc.as_pos_vec(pos, token.shape[0])
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    positions = pos[:, None]  # (B, 1) per-row rope positions
     norm = T._norm(cfg)
     hd = cfg.resolved_head_dim
 
@@ -120,29 +135,40 @@ def prefill_compressed(
     max_seq: int,
     keep: int = 4,
     *,
+    lengths: jax.Array | None = None,  # (B,) valid prompt tokens per row
     dtype=jnp.bfloat16,
 ) -> tuple[jax.Array, kvc.CompressedKVCache]:
     """Prefill into the compressed store: raw prefill then bulk-compress.
 
-    Prompt K/V of all full 8-token blocks is DCT-packed; the remainder
-    (< 8 tokens) lands in the raw tail.
+    `lengths[b]` is row b's true prompt length (right-padded prompts); it
+    drives the per-row tail extraction — full 8-token blocks below the
+    row's watermark are DCT-packed, the partial remainder lands raw in the
+    row's tail ring. Defaults to the full token-array length for every row
+    (the lock-step case).
+
+    Only the prompt's own blocks run through the codec; the rest of the
+    max_seq store is zero-filled directly, so admission cost scales with
+    the prompt, not the pool depth.
     """
     assert cfg.attn_type == "gqa"
+    b, s = tokens.shape
+    lengths = kvc.as_pos_vec(s if lengths is None else lengths, b)
     logits, raw = T.prefill(params, tokens, cfg, max_seq, cache_dtype=jnp.float32)
-    s = tokens.shape[1]
-    s_full = (s // kvc.BLOCK) * kvc.BLOCK
-    comp = jax.vmap(lambda k, v: kvc.prefill_compress(k, v, keep))(
-        raw["k"], raw["v"]
-    )  # vmap over layers
-    # tail: the trailing partial block (positions s_full .. s)
-    tail_src_k = jax.lax.dynamic_slice_in_dim(raw["k"], s_full, kvc.BLOCK, 2) \
-        if s_full + kvc.BLOCK <= raw["k"].shape[2] else raw["k"][:, :, -kvc.BLOCK:]
-    tail_src_v = jax.lax.dynamic_slice_in_dim(raw["v"], s_full, kvc.BLOCK, 2) \
-        if s_full + kvc.BLOCK <= raw["v"].shape[2] else raw["v"][:, :, -kvc.BLOCK:]
+    nb_total = max_seq // kvc.BLOCK
+    nb_used = min(-(-s // kvc.BLOCK), nb_total)  # blocks covering the prompt
+    comp = jax.vmap(
+        lambda k, v: kvc.prefill_compress(k, v, keep, pos=lengths)
+    )(raw["k"][:, :, :nb_used * kvc.BLOCK],
+      raw["v"][:, :, :nb_used * kvc.BLOCK])  # vmap over layers
+    if nb_used < nb_total:  # zero-fill the unwritten block range (axis 2)
+        padb = lambda a: jnp.pad(
+            a, ((0, 0), (0, 0), (0, nb_total - nb_used)) + ((0, 0),) * (a.ndim - 3))
+        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+            comp[key] = padb(comp[key])
     cache = kvc.CompressedKVCache(
         packed_k=comp["packed_k"], scale_k=comp["scale_k"],
         packed_v=comp["packed_v"], scale_v=comp["scale_v"],
-        tail_k=tail_src_k.astype(dtype), tail_v=tail_src_v.astype(dtype),
+        tail_k=comp["tail_k"].astype(dtype), tail_v=comp["tail_v"].astype(dtype),
         keep=keep,
     )
     return logits, cache
@@ -165,14 +191,25 @@ class ServeConfig:
 
 
 def make_steps(api: ModelAPI, sc: ServeConfig):
-    """(prefill_fn, decode_fn, cache_init). jit left to the caller/Engine."""
+    """(prefill_fn, decode_fn, cache_init, vec_pos). jit left to the caller.
+
+    prefill_fn(params, tokens, lengths=None) -> (logits, cache)
+    decode_fn(params, token, cache, pos)     -> (logits, cache)
+
+    vec_pos=True marks families whose decode accepts a per-slot (B,)
+    position vector — the requirement for continuous batching. Recurrent
+    families (state caches, scalar step index) report False and are served
+    wave-at-a-time. The classification lives on ArchConfig.vec_pos_decode
+    (shared with ModelAPI.input_specs).
+    """
     cfg = api.cfg
     use_comp = sc.kv_compress and cfg.attn_type == "gqa" and \
-        cfg.resolved_head_dim % 8 == 0 and cfg.family in ("dense", "moe", "vlm")
+        cfg.resolved_head_dim % 8 == 0 and cfg.vec_pos_decode
 
     if use_comp:
-        def prefill_fn(params, tokens):
-            return prefill_compressed(params, tokens, cfg, sc.max_seq, sc.kv_keep)
+        def prefill_fn(params, tokens, lengths=None):
+            return prefill_compressed(params, tokens, cfg, sc.max_seq, sc.kv_keep,
+                                      lengths=lengths)
 
         def decode_fn(params, token, cache, pos):
             return decode_step_compressed(params, token, cache, pos, cfg,
@@ -180,20 +217,20 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
                                           codec_backend=sc.codec_backend)
 
         cache_init = lambda b: kvc.init_compressed_cache(cfg, b, sc.max_seq, sc.kv_keep)
-        return prefill_fn, decode_fn, cache_init
+        return prefill_fn, decode_fn, cache_init, True
 
-    if cfg.family in ("dense", "moe", "vlm"):
-        def prefill_fn(params, tokens):
+    if cfg.vec_pos_decode:
+        def prefill_fn(params, tokens, lengths=None):
             return T.prefill(params, tokens, cfg, sc.max_seq)
 
         def decode_fn(params, token, cache, pos):
             return T.decode_step(params, token, cache, pos, cfg, kv_block=sc.kv_block)
 
         cache_init = lambda b: api.init_cache(b, sc.max_seq)
-        return prefill_fn, decode_fn, cache_init
+        return prefill_fn, decode_fn, cache_init, True
 
     # recurrent families: prefill = teacher-forced decode of the prompt
-    def prefill_fn(params, tokens):
+    def prefill_fn(params, tokens, lengths=None):
         b, s = tokens.shape
         # cache activations must match the params' compute dtype
         cache = api.init_cache(b, sc.max_seq, dtype=params["embed"].dtype)
@@ -210,11 +247,29 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
         return api.decode_step(params, token, cache, pos)
 
     cache_init = lambda b: api.init_cache(b, sc.max_seq)
-    return prefill_fn, decode_fn, cache_init
+    return prefill_fn, decode_fn, cache_init, False
 
 
 # ---------------------------------------------------------------------------
-# Static-batch engine
+# Slot lifecycle helpers (jit-able; work on any cache pytree, batch axis 1)
+# ---------------------------------------------------------------------------
+
+def cache_write_slot(cache, slot_cache, slot: jax.Array):
+    """Copy a single-request (batch=1) cache into slot `slot` of the pool."""
+    return jax.tree.map(
+        lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+            c, s.astype(c.dtype), slot, axis=1),
+        cache, slot_cache,
+    )
+
+
+def cache_reset_slot(cache, slot: jax.Array):
+    """Zero one slot's planes on retirement (any cache pytree)."""
+    return kvc.cache_reset_slot(cache, slot)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -227,65 +282,194 @@ class Request:
 
 
 class Engine:
-    """Admit up to `batch` requests, prefill once, decode lock-step.
+    """Continuous-batching request server over a shared KV pool.
 
-    Prompts are right-aligned to a common length (left-padded with 0; the
-    causal mask plus identical lengths keep semantics exact for the batch).
-    Sampling: greedy or temperature softmax with a fixed seed per engine.
+    Slots are independent: each live request has its own position, so a
+    retired slot is re-admitted immediately from the queue while its
+    neighbours keep decoding — no request waits for the wave's slowest.
+    Admission prefills ONE request (prompt bucketed to a multiple of 8 to
+    bound jit retraces) and splices its cache into the free slot; live
+    slots are never re-prefilled.
+
+    Sampling order is explicit: the first output token is sampled from the
+    prefill logits at the prompt's last position; a decode step only runs
+    while some slot still needs tokens (a request whose max_new is 1
+    finishes at admission without a decode step).
+
+    `scheduler="static"` restores wave-at-a-time lock-step batching
+    (right-aligned prompts, one scalar position) — the baseline the
+    throughput benchmark compares against. Families without per-slot
+    position support (recurrent state caches) always use it.
     """
 
     def __init__(self, api: ModelAPI, params: Params, sc: ServeConfig, batch: int,
-                 seed: int = 0):
+                 seed: int = 0, scheduler: str = "continuous"):
+        assert scheduler in ("continuous", "static"), scheduler
         self.api = api
         self.params = params
         self.sc = sc
         self.batch = batch
         self.rng = jax.random.PRNGKey(seed)
-        prefill_fn, decode_fn, cache_init = make_steps(api, sc)
+        prefill_fn, decode_fn, cache_init, vec_pos = make_steps(api, sc)
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
+        self._cache_init = cache_init
+        self._write = jax.jit(cache_write_slot)
+        self._reset = jax.jit(cache_reset_slot)
+        self.vec_pos = vec_pos
+        self.scheduler = scheduler if vec_pos else "static"
         self.stats = {"requests": 0, "tokens_out": 0, "steps": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "slot_steps_live": 0, "slot_steps_total": 0}
 
+    # ------------------------------------------------------------------ util
     def _sample(self, logits: jax.Array) -> jax.Array:
         if self.sc.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.rng, sub = jax.random.split(self.rng)
         return jax.random.categorical(sub, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
 
+    def slot_utilization(self) -> float:
+        """Fraction of decode slot-steps spent on live requests."""
+        return self.stats["slot_steps_live"] / max(self.stats["slot_steps_total"], 1)
+
+    # ------------------------------------------------------------------ API
     def generate(self, requests: list[Request]) -> list[Request]:
-        assert len(requests) <= self.batch
-        while len(requests) < self.batch:  # pad batch with a dummy slot
-            requests.append(Request(uid=-1, prompt=np.zeros(8, np.int32), max_new=1))
-        plen = max(len(r.prompt) for r in requests)
-        plen = max(8, plen)
+        """Serve every request to completion; returns them in input order.
+
+        The caller's list is never mutated; the Request objects are (their
+        out_tokens/done fields fill in as slots retire).
+        """
+        queue = list(requests)
+        if self.scheduler == "static":
+            for w0 in range(0, len(queue), self.batch):
+                self._run_wave(queue[w0:w0 + self.batch])
+        else:
+            self._run_continuous(queue)
+        self.stats["requests"] += len(queue)
+        return queue
+
+    # ------------------------------------------------- continuous scheduler
+    def _admit(self, r: Request, cache, slot: int):
+        """Prefill one request (batch=1) and splice it into `slot`."""
+        plen = len(r.prompt)
+        bucket = max(kvc.BLOCK, -(-plen // kvc.BLOCK) * kvc.BLOCK)
+        if bucket > self.sc.max_seq:
+            raise ValueError(
+                f"prompt of {plen} tokens needs a {bucket}-token bucket "
+                f"> max_seq={self.sc.max_seq}")
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = r.prompt
+        logits, slot_cache = self._prefill(
+            self.params, jnp.asarray(padded), jnp.asarray([plen], jnp.int32))
+        cache = self._write(cache, slot_cache, jnp.int32(slot))
+        first = int(np.asarray(self._sample(logits[:, plen - 1]))[0])
+        return first, cache
+
+    def _run_continuous(self, queue: list[Request]) -> None:
+        slots: list[Request | None] = [None] * self.batch
+        pos = np.zeros(self.batch, np.int32)
+        token = np.zeros(self.batch, np.int32)
+        cache = self._cache_init(self.batch)
+        qi = 0
+        while True:
+            # ---- admission: fill every free slot from the queue ----------
+            for i in range(self.batch):
+                if slots[i] is not None or qi >= len(queue):
+                    continue
+                r = queue[qi]
+                qi += 1
+                t0 = time.perf_counter()
+                first, cache = self._admit(r, cache, i)
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                r.out_tokens.append(first)
+                self.stats["tokens_out"] += 1
+                plen = len(r.prompt)
+                if first == self.sc.eos_id or len(r.out_tokens) >= r.max_new \
+                        or plen >= self.sc.max_seq:
+                    r.done = True  # finished at admission — no decode step
+                    cache = self._reset(cache, jnp.int32(i))
+                else:
+                    slots[i] = r
+                    pos[i] = plen
+                    token[i] = first
+            live = [i for i in range(self.batch) if slots[i] is not None]
+            if not live:
+                if qi >= len(queue):
+                    return
+                continue  # everything retired at admission; admit more
+            # ---- one decode step over the pool, per-slot positions -------
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, jnp.asarray(token), cache,
+                                         jnp.asarray(pos))
+            nxt = np.asarray(self._sample(logits))
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["steps"] += 1
+            self.stats["slot_steps_total"] += self.batch
+            self.stats["slot_steps_live"] += len(live)
+            for i in live:
+                r = slots[i]
+                tok = int(nxt[i])
+                r.out_tokens.append(tok)
+                self.stats["tokens_out"] += 1
+                pos[i] += 1
+                token[i] = tok
+                if tok == self.sc.eos_id or len(r.out_tokens) >= r.max_new \
+                        or pos[i] >= self.sc.max_seq:
+                    r.done = True
+                    slots[i] = None  # retire; slot re-admits next iteration
+                    pos[i] = 0
+                    token[i] = 0
+                    cache = self._reset(cache, jnp.int32(i))
+
+    # ----------------------------------------------------- static scheduler
+    def _run_wave(self, wave: list[Request]) -> None:
+        """Lock-step wave: right-aligned prompts, one scalar position."""
+        assert len(wave) <= self.batch
+        slots = list(wave) + [
+            Request(uid=-1, prompt=np.zeros(kvc.BLOCK, np.int32), max_new=1)
+            for _ in range(self.batch - len(wave))
+        ]
+        plen = max(kvc.BLOCK, max(len(r.prompt) for r in slots))
         prompts = np.zeros((self.batch, plen), np.int32)
-        for i, r in enumerate(requests):
+        for i, r in enumerate(slots):
             prompts[i, plen - len(r.prompt):] = r.prompt  # right-align
 
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
         self.stats["prefill_s"] += time.perf_counter() - t0
 
+        # explicit ordering: sample from prefill -> append/check -> only then
+        # decode. If every request finishes on its first token, no decode
+        # step runs and no logits are sampled twice.
         token = self._sample(logits[:, -1])
-        max_new = max(r.max_new for r in requests)
+        max_new = max(r.max_new for r in wave)
         done = np.zeros(self.batch, bool)
         t0 = time.perf_counter()
         for step in range(max_new):
-            for i, r in enumerate(requests):
+            tok_np = np.asarray(token)
+            for i, r in enumerate(slots):
                 if r.uid >= 0 and not r.done:
-                    tok = int(token[i])
+                    tok = int(tok_np[i])
                     r.out_tokens.append(tok)
+                    self.stats["tokens_out"] += 1
                     if tok == self.sc.eos_id or len(r.out_tokens) >= r.max_new:
                         r.done = True
                 done[i] = r.done or r.uid < 0
-            self.stats["tokens_out"] += int((~done).sum()) + int(done.sum() * 0)
             if done.all():
                 break
-            pos = jnp.int32(plen + step)
-            logits_step, cache = self._decode(self.params, token, cache, pos)
+            if plen + step >= self.sc.max_seq:
+                # context exhausted: no slot can write another token — retire
+                # the wave truncated (mirrors the continuous pos >= max_seq
+                # guard) instead of silently dropping K/V writes
+                for r in slots:
+                    if r.uid >= 0:
+                        r.done = True
+                break
+            logits_step, cache = self._decode(self.params, token, cache,
+                                              jnp.int32(plen + step))
             token = self._sample(logits_step)
             self.stats["steps"] += 1
+            self.stats["slot_steps_total"] += self.batch
+            self.stats["slot_steps_live"] += int((~done).sum())
         self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["requests"] += sum(1 for r in requests if r.uid >= 0)
-        return [r for r in requests if r.uid >= 0]

@@ -44,9 +44,10 @@ def test_compressed_decode_tracks_raw(lm):
     api, params = lm
     rng = np.random.default_rng(2)
     toks = jnp.asarray(rng.integers(0, api.cfg.vocab_size, (2, 24)).astype(np.int32))
-    pf_r, dec_r, _ = E.make_steps(api, E.ServeConfig(max_seq=64))
-    pf_c, dec_c, _ = E.make_steps(api, E.ServeConfig(max_seq=64, kv_compress=True,
-                                                     kv_keep=8))
+    pf_r, dec_r, _, vec_r = E.make_steps(api, E.ServeConfig(max_seq=64))
+    pf_c, dec_c, _, vec_c = E.make_steps(api, E.ServeConfig(max_seq=64, kv_compress=True,
+                                                            kv_keep=8))
+    assert vec_r and vec_c  # transformer families support per-slot positions
     lr, cr = pf_r(params, toks)
     lc, cc = pf_c(params, toks)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(lc), atol=1e-4)
@@ -65,7 +66,8 @@ def test_recurrent_prefill_rwkv():
     params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
     rng = np.random.default_rng(3)
     toks = jnp.asarray(rng.integers(0, api.cfg.vocab_size, (2, 12)).astype(np.int32))
-    pf, dec, _ = E.make_steps(api, E.ServeConfig(max_seq=32))
+    pf, dec, _, vec = E.make_steps(api, E.ServeConfig(max_seq=32))
+    assert not vec  # recurrent families keep the scalar step index
     logits_seq, cache = pf(params, toks)
     full = api.forward(params, {"tokens": toks}, remat="none")
     np.testing.assert_allclose(np.asarray(logits_seq[:, -1]),

@@ -1,0 +1,253 @@
+"""Continuous-batching serve tests: per-slot positions through the
+compressed KV store, slot retirement/re-admission, and parity of batched
+slots against single-request runs (reference backend)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv_cache as KV
+from repro.models import api as model_api
+from repro.serve import engine as E
+
+PLENS = [5, 9, 12, 16, 3, 21, 8, 14]
+MAX_NEWS = [3, 7, 5, 9, 4, 6, 8, 5]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    api = model_api.build_reduced("yi_6b")
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return api, params
+
+
+def _requests(n=8, seed=42):
+    rng = np.random.default_rng(seed)
+    return [E.Request(uid=i, prompt=rng.integers(0, 200, PLENS[i]).astype(np.int32),
+                      max_new=MAX_NEWS[i]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Per-slot position vectors in the cache primitives
+# ---------------------------------------------------------------------------
+
+def test_update_and_attend_vector_pos_match_per_row_scalar(lm):
+    """One batched run with per-slot positions == each row's scalar run."""
+    api, _ = lm
+    cfg = api.cfg
+    b, max_seq, keep = 3, 64, 6
+    hd, hkv, h = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_heads
+    rng = np.random.default_rng(1)
+    depths = [12, 23, 37]
+    ks = jnp.asarray(rng.standard_normal((b, max(depths), hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, max(depths), hkv, hd)).astype(np.float32))
+    cache = KV.init_compressed_cache(cfg, b, max_seq, keep=keep, dtype=jnp.float32)
+    lc0 = {"packed_k": cache.packed_k[0], "scale_k": cache.scale_k[0],
+           "packed_v": cache.packed_v[0], "scale_v": cache.scale_v[0],
+           "tail_k": cache.tail_k[0], "tail_v": cache.tail_v[0]}
+
+    lc_vec = dict(lc0)
+    for t in range(max(depths)):
+        posv = jnp.asarray([min(t, d - 1) for d in depths], jnp.int32)
+        kn = jnp.stack([ks[i, min(t, depths[i] - 1)] for i in range(b)])[:, None]
+        vn = jnp.stack([vs[i, min(t, depths[i] - 1)] for i in range(b)])[:, None]
+        lc_vec = KV.update_layer(lc_vec, kn, vn, posv, keep)
+
+    for i, d in enumerate(depths):
+        lci = {k: v[i:i + 1] for k, v in lc0.items()}
+        for t in range(d):
+            lci = KV.update_layer(lci, ks[i:i + 1, t:t + 1], vs[i:i + 1, t:t + 1],
+                                  jnp.int32(t), keep)
+        for key in lci:
+            np.testing.assert_array_equal(
+                np.asarray(lc_vec[key][i:i + 1]), np.asarray(lci[key]),
+                err_msg=f"row {i} key {key}")
+
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    posq = jnp.asarray([d - 1 for d in depths], jnp.int32)
+    out_vec = KV.attend_compressed(q, lc_vec, posq, keep, kv_block=16)
+    for i, d in enumerate(depths):
+        lci = {k: v[i:i + 1] for k, v in lc_vec.items()}
+        oi = KV.attend_compressed(q[i:i + 1], lci, jnp.int32(d - 1), keep, kv_block=16)
+        np.testing.assert_allclose(np.asarray(out_vec[i:i + 1]), np.asarray(oi),
+                                   atol=1e-6)
+    # fused kernel wrapper takes the same vector
+    from repro.kernels.fused_attend import ops as fa_ops
+    o_kern = fa_ops.attend_with_tail(q, lc_vec, posq, tile_s=16)
+    np.testing.assert_allclose(np.asarray(o_kern), np.asarray(out_vec), atol=1e-4)
+
+
+def test_prefill_compress_per_row_lengths(lm):
+    """Bulk prefill with per-row lengths == per-row incremental feeds."""
+    api, _ = lm
+    cfg = api.cfg
+    b, s, keep = 3, 40, 6
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    rng = np.random.default_rng(3)
+    ks = jnp.asarray(rng.standard_normal((b, s, hkv, hd)).astype(np.float32))
+    vs = jnp.asarray(rng.standard_normal((b, s, hkv, hd)).astype(np.float32))
+    lens = [12, 23, 37]
+    bulk = KV.prefill_compress(ks, vs, keep, pos=jnp.asarray(lens, jnp.int32))
+    cache = KV.init_compressed_cache(cfg, b, 64, keep=keep, dtype=jnp.float32)
+    lc = {"packed_k": cache.packed_k[0], "scale_k": cache.scale_k[0],
+          "packed_v": cache.packed_v[0], "scale_v": cache.scale_v[0],
+          "tail_k": cache.tail_k[0], "tail_v": cache.tail_v[0]}
+    for t in range(max(lens)):
+        posv = jnp.asarray([min(t, d - 1) for d in lens], jnp.int32)
+        kn = jnp.stack([ks[i, min(t, lens[i] - 1)] for i in range(b)])[:, None]
+        vn = jnp.stack([vs[i, min(t, lens[i] - 1)] for i in range(b)])[:, None]
+        lc = KV.update_layer(lc, kn, vn, posv, keep)
+    for i, d in enumerate(lens):
+        nfl = d // 8
+        np.testing.assert_array_equal(np.asarray(bulk["packed_k"][i, :nfl]),
+                                      np.asarray(lc["packed_k"][i, :nfl]))
+        fl = nfl * 8
+        np.testing.assert_allclose(np.asarray(bulk["tail_k"][i, :d - fl]),
+                                   np.asarray(ks[i, fl:d]), atol=0)
+
+
+def test_cache_reset_slot(lm):
+    api, _ = lm
+    cfg = api.cfg
+    cache = KV.init_compressed_cache(cfg, 3, 32, keep=4, dtype=jnp.float32)
+    dirty = jax.tree.map(lambda a: a + jnp.ones_like(a), cache)
+    wiped = KV.cache_reset_slot(dirty, 1)
+    for name in ("packed_k", "scale_k", "packed_v", "scale_v", "tail_k", "tail_v"):
+        arr = np.asarray(getattr(wiped, name))
+        assert (arr[:, 1] == 0).all(), name
+        assert (arr[:, 0] != 0).any() and (arr[:, 2] != 0).any(), name
+
+
+# ---------------------------------------------------------------------------
+# Engine: continuous scheduling semantics
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_single_request_runs_compressed(lm):
+    """8 requests, distinct prompt lengths/budgets, 4 slots, compressed KV:
+    greedy per-request outputs == running each request alone (acceptance
+    criterion), with every request prefilled exactly once."""
+    api, params = lm
+    sc = E.ServeConfig(max_seq=64, kv_compress=True, kv_keep=8,
+                       codec_backend="reference")
+    eng = E.Engine(api, params, sc, batch=4)
+    admissions = []
+    inner_admit = eng._admit
+    eng._admit = lambda r, c, i: admissions.append(r.uid) or inner_admit(r, c, i)
+    reqs = _requests()
+    done = eng.generate(reqs)
+    assert [r.uid for r in done] == list(range(8))
+    assert sorted(admissions) == list(range(8))  # one prefill per request
+    assert eng.stats["requests"] == 8
+    assert eng.stats["tokens_out"] == sum(MAX_NEWS)
+
+    solo = E.Engine(api, params, sc, batch=1)
+    for r, want in zip(_requests(), done):
+        solo.generate([r])
+        assert r.out_tokens == want.out_tokens, (r.uid, r.out_tokens, want.out_tokens)
+
+
+def test_continuous_matches_single_request_runs_mla():
+    """MLA (latent cache) continuous batching == solo runs: pins the per-row
+    scatter on c_kv/k_rope and the per-row horizon in mla_decode_attention."""
+    api = model_api.build_reduced("deepseek_v2_236b")
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    sc = E.ServeConfig(max_seq=64, kv_compress=True)  # MLA falls back to raw latent
+    shapes = [(5, 4), (11, 6), (7, 3)]
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [E.Request(uid=i, prompt=rng.integers(0, 200, n).astype(np.int32),
+                          max_new=m) for i, (n, m) in enumerate(shapes)]
+
+    eng = E.Engine(api, params, sc, batch=2)
+    assert eng.scheduler == "continuous"
+    done = eng.generate(reqs())
+    solo = E.Engine(api, params, sc, batch=1)
+    for r, want in zip(reqs(), done):
+        solo.generate([r])
+        assert r.out_tokens == want.out_tokens, (r.uid, r.out_tokens, want.out_tokens)
+
+
+def test_continuous_matches_single_request_runs_raw(lm):
+    api, params = lm
+    sc = E.ServeConfig(max_seq=64)
+    eng = E.Engine(api, params, sc, batch=3)
+    done = eng.generate(_requests(n=5))
+    solo = E.Engine(api, params, sc, batch=1)
+    for r, want in zip(_requests(n=5), done):
+        solo.generate([r])
+        assert r.out_tokens == want.out_tokens, (r.uid,)
+
+
+def test_midstream_eos_retires_and_reuses_slot(lm):
+    """EOS mid-stream retires the slot; the freed slot serves queued work."""
+    api, params = lm
+    base = E.ServeConfig(max_seq=64, kv_compress=True, kv_keep=8,
+                         codec_backend="reference")
+    probe = E.Engine(api, params, base, batch=2).generate(_requests())
+    # pick a token that appears mid-stream (not first) in some output
+    eos = next(t for r in probe for t in r.out_tokens[1:-1])
+    truncated = [r.out_tokens.index(eos) + 1 if eos in r.out_tokens
+                 else len(r.out_tokens) for r in probe]
+
+    sc = E.ServeConfig(max_seq=64, kv_compress=True, kv_keep=8,
+                       codec_backend="reference", eos_id=eos)
+    eng = E.Engine(api, params, sc, batch=2)
+    done = eng.generate(_requests())
+    assert eng.stats["requests"] == 8  # 8 requests over 2 slots => reuse
+    for r, want_len, ref in zip(done, truncated, probe):
+        assert r.done
+        assert len(r.out_tokens) == want_len
+        assert r.out_tokens == ref.out_tokens[:want_len], r.uid
+        if eos in r.out_tokens:
+            assert r.out_tokens[-1] == eos and eos not in r.out_tokens[:-1]
+
+
+def test_finish_at_admission_runs_no_decode_step(lm):
+    """max_new=1: the only token comes from prefill logits; the engine must
+    not run (or sample from) a decode step."""
+    api, params = lm
+    for scheduler in ("continuous", "static"):
+        eng = E.Engine(api, params, E.ServeConfig(max_seq=64), batch=4,
+                       scheduler=scheduler)
+        rng = np.random.default_rng(7)
+        reqs = [E.Request(uid=i, prompt=rng.integers(0, 200, 6 + i).astype(np.int32),
+                          max_new=1) for i in range(3)]
+        done = eng.generate(reqs)
+        assert eng.stats["steps"] == 0, scheduler
+        assert all(len(r.out_tokens) == 1 and r.done for r in done)
+
+
+def test_generate_does_not_mutate_caller_list(lm):
+    api, params = lm
+    for scheduler in ("continuous", "static"):
+        eng = E.Engine(api, params, E.ServeConfig(max_seq=64), batch=4,
+                       scheduler=scheduler)
+        reqs = _requests(n=2)
+        out = eng.generate(reqs)
+        assert len(reqs) == 2, scheduler  # no dummy-slot padding appended
+        assert out is not reqs
+        assert [r.uid for r in out] == [0, 1]
+
+
+def test_context_exhaustion_truncates_both_schedulers(lm):
+    """A request whose budget would overrun max_seq retires truncated (the
+    cache cannot hold another token) instead of silently dropping K/V
+    writes and generating from a stale cache."""
+    api, params = lm
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 200, 20).astype(np.int32)
+    for scheduler in ("continuous", "static"):
+        eng = E.Engine(api, params, E.ServeConfig(max_seq=24), batch=2,
+                       scheduler=scheduler)
+        r = eng.generate([E.Request(uid=0, prompt=prompt.copy(), max_new=16)])[0]
+        # 1 prefill token + decode writes at positions 20..23
+        assert r.done and len(r.out_tokens) == 24 - 20 + 1, (scheduler, r.out_tokens)
+
+
+def test_slot_utilization_tracked(lm):
+    api, params = lm
+    eng = E.Engine(api, params, E.ServeConfig(max_seq=64), batch=4)
+    eng.generate(_requests(n=6))
+    assert eng.stats["slot_steps_total"] == eng.stats["steps"] * 4
+    assert 0.0 < eng.slot_utilization() <= 1.0
