@@ -1,0 +1,130 @@
+"""CompressionPlan sweep: uniform vs pyramid vs budget-solved plans.
+
+For each plan the sweep reports
+  * the analytic compressed-KV ratio vs a raw bf16 cache (the paper's
+    Table II bandwidth/footprint argument, per plan), and
+  * the decode perplexity delta: teacher-forced next-token perplexity of a
+    briefly-trained reduced LM decoding step-by-step OUT OF the compressed
+    KV pool under the plan, against the same decode over the raw cache.
+    (ActCompress leaves the forward bit-identical, so the KV path is where
+    a plan's lossiness is visible.)
+
+Writes benchmarks/artifacts/plan_sweep.json.  `--smoke` shrinks everything
+to the CI-sized configuration (a couple of minutes on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec.plan import CompressionPlan, raw_kv_bytes_per_token
+from repro.data.synthetic import TokenStream
+from repro.models import api as model_api
+from repro.optim.adamw import AdamWConfig
+from repro.serve import engine as E
+from repro.train import step as train_step
+
+
+def train_params(api, ts, steps: int):
+    tc = train_step.TrainConfig(
+        microbatches=1, remat="full", param_dtype=jnp.float32,
+        optimizer=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=steps + 20))
+    state = train_step.init_train_state(api, tc)
+    step = jax.jit(train_step.make_train_step(
+        api, jax.make_mesh((1,), ("data",)), tc), donate_argnums=(0,))
+    m = {"loss": jnp.nan}  # steps=0 benchmarks the untrained model
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ts.batch(i).items()}
+        state, m = step(state, b)
+    return state["params"], float(m["loss"])
+
+
+def decode_ce(api, params, toks, max_seq: int, sc: E.ServeConfig,
+              prefix: int = 8) -> float:
+    """Teacher-forced CE of positions prefix..S-1, decoded one token at a
+    time out of the cache `sc` configures (raw or compressed-per-plan)."""
+    prefill_fn, decode_fn, _, _ = E.make_steps(api, sc)
+    prefill_fn, decode_fn = jax.jit(prefill_fn), jax.jit(decode_fn)
+    b, s = toks.shape
+    logits, cache = prefill_fn(params, toks[:, :prefix])
+    lse = jax.nn.logsumexp(logits[:, -1], axis=-1)
+    ce = [lse - jnp.take_along_axis(logits[:, -1], toks[:, prefix:prefix + 1],
+                                    axis=-1)[:, 0]]
+    for t in range(prefix, s - 1):
+        logits, cache = decode_fn(params, toks[:, t], cache, jnp.int32(t))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ce.append(lse - jnp.take_along_axis(logits, toks[:, t + 1:t + 2],
+                                            axis=-1)[:, 0])
+    return float(jnp.mean(jnp.stack(ce)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (reduced arch, few steps)")
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    api = model_api.build_reduced(args.arch)
+    cfg = api.cfg
+    steps = 10 if args.smoke else args.train_steps
+    seq = min(args.max_seq, 48 if args.smoke else args.max_seq)
+    ts = TokenStream(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    params, train_loss = train_params(api, ts, steps)
+    toks = jnp.asarray(
+        np.stack([ts.batch(1000 + i)["tokens"][0, :seq]
+                  for i in range(4)]).astype(np.int32))
+    base_ce = decode_ce(api, params, toks, args.max_seq,
+                        E.ServeConfig(max_seq=args.max_seq))
+
+    raw_kv = CompressionPlan.uniform(8).kv_cache_bytes(cfg, args.max_seq)
+    budget = 0.7 * raw_kv
+    plans = {
+        "uniform_k8": CompressionPlan.uniform(8),
+        "uniform_k4": CompressionPlan.uniform(4),
+        "pyramid_8_4": CompressionPlan.pyramid(cfg.n_layers, 8, 4),
+        "budget_70pct": CompressionPlan.from_budget(cfg, args.max_seq, budget),
+    }
+
+    raw_bytes = raw_kv_bytes_per_token(cfg) * args.max_seq
+    results = {"arch": cfg.name, "train_loss": train_loss,
+               "base_decode_ce": base_ce,
+               "base_ppl": float(np.exp(base_ce)), "plans": {}}
+    for name, plan in plans.items():
+        sc = E.ServeConfig(max_seq=args.max_seq, kv_compress=True, plan=plan,
+                           codec_backend="reference")
+        ce = decode_ce(api, params, toks, args.max_seq, sc)
+        kv_bytes = plan.kv_cache_bytes(cfg, args.max_seq)
+        results["plans"][name] = {
+            "spec": plan.to_spec(),
+            "keeps": list(plan.keeps(cfg.n_layers)),
+            "kv_ratio": kv_bytes / raw_bytes,
+            "decode_ce": ce,
+            "ppl_delta": float(np.exp(ce) - np.exp(base_ce)),
+        }
+        print(f"{name:14s} spec={plan.to_spec():40s} "
+              f"kv_ratio={kv_bytes / raw_bytes:.3f} "
+              f"ppl_delta={results['plans'][name]['ppl_delta']:+.4f}")
+
+    # the budget-solved plan must honor its budget, and the pyramid must be
+    # strictly cheaper than the gentlest uniform plan
+    assert plans["budget_70pct"].kv_cache_bytes(cfg, args.max_seq) <= budget
+    assert results["plans"]["pyramid_8_4"]["kv_ratio"] < \
+        results["plans"]["uniform_k8"]["kv_ratio"]
+
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "plan_sweep.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

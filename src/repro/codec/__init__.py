@@ -8,6 +8,7 @@ mode on CPU).  See `repro.codec.api` for the schemes and
 REPRO_CODEC_INTERPRET).
 """
 from repro.codec import dispatch
+from repro.codec import plan
 from repro.codec.api import (
     BLOCK,
     Codec,
@@ -29,6 +30,7 @@ from repro.codec.api import (
     roundtrip,
     storage_stats,
 )
+from repro.codec.plan import CompressionPlan, LayerPolicy, as_plan
 from repro.codec.dispatch import (
     available_backends,
     get_backend,
@@ -63,10 +65,13 @@ __all__ = [
     "BLOCK",
     "Codec",
     "Compressed",
+    "CompressionPlan",
     "CompressionPolicy",
+    "LayerPolicy",
     "PallasBackend",
     "ReferenceBackend",
     "TruncatedCompressed",
+    "as_plan",
     "available_backends",
     "compress",
     "compress_blocks",
@@ -81,6 +86,7 @@ __all__ = [
     "paper_decompress",
     "paper_roundtrip",
     "paper_storage_bits",
+    "plan",
     "quant_pack",
     "register_backend",
     "resolve_backend_name",

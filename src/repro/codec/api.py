@@ -113,9 +113,14 @@ class TruncatedCompressed:
         return cls(coefs, scale, zero, keep, orig_hw)
 
     def nbytes_per_element(self) -> float:
-        """Compressed bytes per original element (the runtime ratio)."""
+        """Compressed bytes per original element (the runtime ratio).
+
+        The header is the f32 scale only: the `zero` plane is guaranteed
+        zero by the symmetric quantizer (it exists purely for layout
+        compatibility), so charging for it would overstate the footprint.
+        """
         k = self.keep
-        per_tile = k * k * 1 + 8  # int8 corner + f32 scale/zero header
+        per_tile = k * k * 1 + 4  # int8 corner + f32 scale header
         return per_tile / (BLOCK * BLOCK)
 
 
@@ -249,10 +254,14 @@ class Codec:
 
     def storage_stats(self, c: TruncatedCompressed,
                       orig_value_bits: int = 16) -> dict[str, float]:
-        """Static storage accounting (no device work): bits, ratio, B/elem."""
+        """Static storage accounting (no device work): bits, ratio, B/elem.
+
+        Counts the f32 scale as the only per-tile header — the always-zero
+        `zero` plane is layout filler, not storage (see TruncatedCompressed).
+        """
         k = c.keep
         ntiles = int(np.prod(c.coefs.shape[:-2]))
-        comp_bits = ntiles * (k * k * 8 + 64)  # int8 corner + f32 scale/zero
+        comp_bits = ntiles * (k * k * 8 + 32)  # int8 corner + f32 scale
         h, w = c.orig_hw
         lead = int(np.prod(c.coefs.shape[:-4])) if c.coefs.ndim > 4 else 1
         orig_bits = lead * h * w * orig_value_bits

@@ -1,0 +1,319 @@
+"""Per-layer compression policy plans (paper §III-B, in API form).
+
+The paper's accelerator programs a **2-bit compression-level register per
+layer** and re-allocates the feature-map buffer to each layer's requirements.
+This module is that mechanism as a first-class API: a frozen `LayerPolicy`
+(keep/bits/enabled/backend) plus a `CompressionPlan` that resolves a policy
+per layer index.  One plan object travels from config/CLI all the way to the
+kernels — every consumer (ActCompress remat, the compressed KV cache, the
+serve engine, the CNN fusion schedule) takes `plan=` instead of threading a
+global scalar `compress_keep`.
+
+Construction:
+
+* presets          — ``CompressionPlan.uniform(keep=4)``,
+                     ``CompressionPlan.pyramid(n_layers, 8, 3)``
+                     (gentle-early / aggressive-late, ASC-style)
+* spec strings     — ``CompressionPlan.from_spec("0-3:keep=6,4-:keep=3")``
+                     for CLIs and configs; ``to_spec()`` is its inverse
+* budget solver    — ``CompressionPlan.from_budget(cfg, max_seq, budget)``
+                     picks the gentlest per-layer keeps whose summed KV
+                     footprint fits the byte budget (the paper's dynamic
+                     buffer allocation, solved off-line)
+
+Plans and policies are frozen/hashable so they can ride as static jit
+arguments and as pytree aux data.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, replace
+
+BLOCK = 8
+KEEP_MIN, KEEP_MAX = 1, BLOCK
+
+# keep sizes of the paper's four quantization levels (core.quantize
+# level_to_keep): aggressive level 0 -> 2x2 corner, gentle level 3 -> 6x6.
+_KEEP_PER_LEVEL = (2, 3, 4, 6)
+
+
+@dataclass(frozen=True)
+class LayerPolicy:
+    """Per-layer compression policy (the paper's per-layer level register).
+
+    keep     — kept k x k low-frequency DCT corner (1..8; 8 = int8 quant only)
+    bits     — step-1 integer precision of the paper-exact scheme
+    enabled  — False => this layer is not compressed (ActCompress saves the
+               raw residual; the CNN fusion boundary passes through)
+    backend  — codec backend override for this layer (None = auto dispatch)
+    """
+
+    keep: int = 4
+    bits: int = 8
+    enabled: bool = True
+    backend: str | None = None
+
+    def __post_init__(self):
+        if not KEEP_MIN <= self.keep <= KEEP_MAX:
+            raise ValueError(f"keep must be in [{KEEP_MIN}, {KEEP_MAX}], got {self.keep}")
+        if not 1 <= self.bits <= 16:
+            raise ValueError(f"bits must be in [1, 16], got {self.bits}")
+
+    @property
+    def kv_keep(self) -> int:
+        """Corner size in the compressed KV store.
+
+        The packed container has no raw mode, so a disabled layer keeps the
+        full 8x8 corner — int8 quantization only, near-lossless."""
+        return self.keep if self.enabled else KEEP_MAX
+
+    @property
+    def paper_level(self) -> int:
+        """Nearest paper quantization level (2-bit register) for this keep."""
+        level = 0
+        for i, k in enumerate(_KEEP_PER_LEVEL):
+            if self.keep >= k:
+                level = i
+        return level
+
+
+# rules are (start, stop, policy) with stop=None meaning open-ended; first
+# match wins, so narrower overrides go before broader ranges.
+Rule = tuple[int, "int | None", LayerPolicy]
+
+
+@dataclass(frozen=True)
+class CompressionPlan:
+    """Resolves a `LayerPolicy` per layer index — one policy object from
+    config to kernel."""
+
+    rules: tuple[Rule, ...] = ()
+    default: LayerPolicy = LayerPolicy()
+
+    # ------------------------------------------------------------ resolution
+    def policy(self, idx: int) -> LayerPolicy:
+        for start, stop, pol in self.rules:
+            if idx >= start and (stop is None or idx < stop):
+                return pol
+        return self.default
+
+    def policies(self, n_layers: int) -> tuple[LayerPolicy, ...]:
+        return tuple(self.policy(i) for i in range(n_layers))
+
+    def keeps(self, n_layers: int) -> tuple[int, ...]:
+        return tuple(p.keep for p in self.policies(n_layers))
+
+    def segments(self, n_layers: int, start: int = 0):
+        """Contiguous (start, stop, policy) runs of equal policy covering
+        [start, n_layers) — the scan-by-segment unit every stacked-layer
+        consumer iterates over."""
+        assert start < n_layers, (start, n_layers)
+        out = []
+        s0, pol = start, self.policy(start)
+        for i in range(start + 1, n_layers):
+            p = self.policy(i)
+            if p != pol:
+                out.append((s0, i, pol))
+                s0, pol = i, p
+        out.append((s0, n_layers, pol))
+        return tuple(out)
+
+    def is_uniform(self, n_layers: int) -> bool:
+        return len(self.segments(n_layers)) == 1
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def uniform(cls, keep: int = 4, bits: int = 8, backend: str | None = None,
+                enabled: bool = True) -> "CompressionPlan":
+        pol = LayerPolicy(keep=keep, bits=bits, enabled=enabled, backend=backend)
+        return cls(rules=((0, None, pol),), default=pol)
+
+    @classmethod
+    def from_keeps(cls, keeps, bits: int = 8,
+                   backend: str | None = None) -> "CompressionPlan":
+        """Explicit per-layer keep list -> plan (runs collapsed to ranges)."""
+        keeps = tuple(int(k) for k in keeps)
+        assert keeps, "empty keep list"
+        rules, s0 = [], 0
+        for i in range(1, len(keeps)):
+            if keeps[i] != keeps[s0]:
+                rules.append((s0, i, LayerPolicy(keep=keeps[s0], bits=bits,
+                                                 backend=backend)))
+                s0 = i
+        rules.append((s0, None, LayerPolicy(keep=keeps[s0], bits=bits,
+                                            backend=backend)))
+        return cls(rules=tuple(rules))
+
+    @classmethod
+    def pyramid(cls, n_layers: int, keep_first: int = 8, keep_last: int = 3,
+                bits: int = 8, backend: str | None = None) -> "CompressionPlan":
+        """Gentle-early / aggressive-late linear ramp (ASC-style): early
+        layers' features feed everything downstream, so they get the larger
+        kept corner."""
+        if n_layers <= 1:
+            return cls.uniform(keep_first, bits=bits, backend=backend)
+        keeps = [round(keep_first + (keep_last - keep_first) * i / (n_layers - 1))
+                 for i in range(n_layers)]
+        return cls.from_keeps(keeps, bits=bits, backend=backend)
+
+    # ----------------------------------------------------------- spec string
+    # "0-3:keep=6,4-:keep=3" — comma-separated RANGE:SETTINGS entries.
+    # RANGE: "a" (one layer), "a-b" (inclusive), "a-" (open). SETTINGS:
+    # "+"-separated keep=K / bits=B / backend=NAME / off flags.
+    _RANGE = re.compile(r"^(\d+)(-(\d*))?$")
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "CompressionPlan":
+        rules = []
+        for entry in spec.split(","):
+            entry = entry.strip()
+            if not entry:
+                continue
+            rng, sep, settings = entry.partition(":")
+            m = cls._RANGE.match(rng.strip())
+            if not m or not sep:
+                raise ValueError(f"bad plan spec entry {entry!r} "
+                                 "(want RANGE:SETTINGS, e.g. '0-3:keep=6')")
+            start = int(m.group(1))
+            if m.group(2) is None:
+                stop: int | None = start + 1
+            else:
+                stop = int(m.group(3)) + 1 if m.group(3) else None
+            if stop is not None and stop <= start:
+                raise ValueError(f"empty range in plan spec entry {entry!r}")
+            kwargs: dict = {}
+            for item in settings.split("+"):
+                item = item.strip()
+                if not item:
+                    continue
+                if item == "off":
+                    kwargs["enabled"] = False
+                elif item == "on":
+                    kwargs["enabled"] = True
+                else:
+                    key, eq, val = item.partition("=")
+                    if not eq:
+                        raise ValueError(f"bad plan setting {item!r} in {entry!r}")
+                    key = key.strip()
+                    val = val.strip()
+                    if key == "keep":
+                        kwargs["keep"] = int(val)
+                    elif key == "bits":
+                        kwargs["bits"] = int(val)
+                    elif key == "backend":
+                        kwargs["backend"] = val
+                    else:
+                        raise ValueError(f"unknown plan setting {key!r} in {entry!r}")
+            rules.append((start, stop, LayerPolicy(**kwargs)))
+        if not rules:
+            raise ValueError(f"empty plan spec {spec!r}")
+        return cls(rules=tuple(rules))
+
+    def to_spec(self) -> str:
+        """Inverse of `from_spec` (defaults omitted, roundtrip-exact)."""
+        parts = []
+        for start, stop, p in self.rules:
+            if stop is None:
+                rng = f"{start}-"
+            elif stop == start + 1:
+                rng = str(start)
+            else:
+                rng = f"{start}-{stop - 1}"
+            settings = [f"keep={p.keep}"]
+            if p.bits != 8:
+                settings.append(f"bits={p.bits}")
+            if p.backend is not None:
+                settings.append(f"backend={p.backend}")
+            if not p.enabled:
+                settings.append("off")
+            parts.append(f"{rng}:{'+'.join(settings)}")
+        return ",".join(parts)
+
+    # --------------------------------------------------------- budget solver
+    def kv_bytes_per_token(self, cfg) -> float:
+        """Compressed KV bytes per token, summed over layers (K and V:
+        int8 packed corner + f32 per-tile scale).  The single place the
+        per-block accounting formula lives — launch reporting and the
+        budget solver both derive from it."""
+        hd = cfg.resolved_head_dim
+        assert hd % BLOCK == 0, hd
+        nh = hd // BLOCK
+        return sum(
+            2 * cfg.n_kv_heads * nh * (pol.kv_keep ** 2 + 4) / BLOCK
+            for pol in self.policies(cfg.n_layers))
+
+    def kv_cache_bytes(self, cfg, max_seq: int, batch: int = 1,
+                       tail_dtype_bytes: int = 2) -> float:
+        """Analytic bytes of the compressed KV pool this plan allocates:
+        packed store for max_seq tokens plus the 8-token raw tail ring."""
+        assert max_seq % BLOCK == 0, max_seq
+        tail = cfg.n_layers * 2 * BLOCK * cfg.n_kv_heads * \
+            cfg.resolved_head_dim * tail_dtype_bytes
+        return batch * (self.kv_bytes_per_token(cfg) * max_seq + tail)
+
+    @classmethod
+    def from_budget(cls, cfg, max_seq: int, budget_bytes: float,
+                    batch: int = 1, keep_max: int = KEEP_MAX,
+                    keep_min: int = KEEP_MIN) -> "CompressionPlan":
+        """Gentlest per-layer keeps whose summed KV footprint fits the budget.
+
+        Greedy walk down a fixed chain of configurations: start every layer
+        at `keep_max` and repeatedly decrement the largest keep (deepest
+        layer first — aggressive-late, like `pyramid`).  Because the chain is
+        independent of the budget, a smaller budget stops strictly further
+        along it, so keeps are pointwise monotone in the budget.
+        """
+        keeps = [keep_max] * cfg.n_layers
+
+        def fits(ks):
+            return cls.from_keeps(ks).kv_cache_bytes(
+                cfg, max_seq, batch=batch) <= budget_bytes
+
+        while not fits(keeps):
+            k = max(keeps)
+            if k <= keep_min:
+                need = cls.from_keeps(keeps).kv_cache_bytes(cfg, max_seq, batch=batch)
+                raise ValueError(
+                    f"budget {budget_bytes:.0f} B infeasible: even keep="
+                    f"{keep_min} everywhere needs {need:.0f} B")
+            idx = max(i for i, v in enumerate(keeps) if v == k)
+            keeps[idx] = k - 1
+        return cls.from_keeps(keeps)
+
+    # -------------------------------------------------------------- plumbing
+    def with_backend(self, backend: str | None) -> "CompressionPlan":
+        """Fill in `backend` on every policy that does not set its own."""
+        if backend is None:
+            return self
+        fill = lambda p: p if p.backend is not None else replace(p, backend=backend)
+        return CompressionPlan(
+            rules=tuple((s, e, fill(p)) for s, e, p in self.rules),
+            default=fill(self.default),
+        )
+
+
+def raw_kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> float:
+    """Uncompressed (bf16 by default) KV bytes per token over all layers —
+    the baseline every plan's `kv_bytes_per_token` is compared against."""
+    return cfg.n_layers * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
+
+
+def as_plan(value, *, keep: int | None = None,
+            backend: str | None = None) -> CompressionPlan:
+    """Normalize any sanctioned plan spelling to a `CompressionPlan`.
+
+    value: CompressionPlan (as-is) | spec string | int (uniform keep) |
+    None (uniform `keep`, the legacy-scalar shim).  `backend` fills in
+    policies that don't pin their own backend.
+    """
+    if value is None:
+        plan = CompressionPlan.uniform(4 if keep is None else keep)
+    elif isinstance(value, CompressionPlan):
+        plan = value
+    elif isinstance(value, str):
+        plan = CompressionPlan.from_spec(value)
+    elif isinstance(value, int):
+        plan = CompressionPlan.uniform(value)
+    else:
+        raise TypeError(f"cannot interpret {value!r} as a CompressionPlan")
+    return plan.with_backend(backend)

@@ -16,6 +16,14 @@ Compressed bytes/elem = (k*k + 4) / 64 vs 2 (bf16): k=4 -> 0.31 B (6.4x),
 k=6 -> 0.63 B (3.2x).  Because decode is memory-bound, the bandwidth saving
 is the same factor — that is the paper's DMA-bandwidth argument verbatim.
 
+The kept corner size k is PER LAYER: a `repro.codec.plan.CompressionPlan`
+resolves a `LayerPolicy` per layer index (the paper's per-layer 2-bit
+compression-level register), and the cache materializes it as a tuple of
+`KVSegment`s — one stacked store per contiguous run of layers with equal
+policy, each with its own (k, k) block geometry.  Uniform plans collapse to
+a single segment, and the legacy `keep=` scalar is a one-line shim for
+`CompressionPlan.uniform(keep)`.
+
 Decode appends single tokens, which don't fill an 8-token seq block, so the
 cache keeps a RAW TAIL of up to 8 tokens; when the tail fills, the whole
 block is DCT-compressed into the packed store.  Positions are PER SLOT:
@@ -41,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codec as codec_lib
+from repro.codec import plan as plan_lib
 
 BLOCK = 8
 
@@ -86,13 +95,13 @@ def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
-class CompressedKVCache:
-    """Per-model compressed KV store + raw 8-token tail ring.
+class KVSegment:
+    """Compressed store for one contiguous run of layers sharing a policy.
 
-    Shapes (GQA):
-      packed_k/v : (L, B, S/8, Hkv, hd/8, k, k) int8
-      scale_k/v  : (L, B, S/8, Hkv, hd/8)       f32
-      tail_k/v   : (L, B, 8, Hkv, hd)           raw dtype
+    Shapes (GQA; Lseg = stop - start layers):
+      packed_k/v : (Lseg, B, S/8, Hkv, hd/8, k, k) int8
+      scale_k/v  : (Lseg, B, S/8, Hkv, hd/8)       f32
+      tail_k/v   : (Lseg, B, 8, Hkv, hd)           raw dtype
     """
 
     packed_k: jax.Array
@@ -101,40 +110,142 @@ class CompressedKVCache:
     scale_v: jax.Array
     tail_k: jax.Array
     tail_v: jax.Array
-    keep: int
+    keep: int                  # static: this segment's kept corner size
+    start: int                 # static: absolute first layer
+    stop: int                  # static: absolute one-past-last layer
+    backend: str | None = None  # static: codec backend (None = auto)
 
     def tree_flatten(self):
         return (
             self.packed_k, self.scale_k, self.packed_v, self.scale_v,
             self.tail_k, self.tail_v,
-        ), (self.keep,)
+        ), (self.keep, self.start, self.stop, self.backend)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, keep=aux[0])
+        return cls(*children, *aux)
+
+    def as_tree(self) -> dict[str, jax.Array]:
+        """The {packed_k, ..., tail_v} dict layer-sliceable consumers scan."""
+        return dict(packed_k=self.packed_k, scale_k=self.scale_k,
+                    packed_v=self.packed_v, scale_v=self.scale_v,
+                    tail_k=self.tail_k, tail_v=self.tail_v)
+
+    def replace_arrays(self, tree: dict[str, jax.Array]) -> "KVSegment":
+        return KVSegment(tree["packed_k"], tree["scale_k"], tree["packed_v"],
+                         tree["scale_v"], tree["tail_k"], tree["tail_v"],
+                         self.keep, self.start, self.stop, self.backend)
+
+    def nbytes(self) -> float:
+        """Device bytes actually held by this segment's planes."""
+        packed = self.packed_k.size + self.packed_v.size          # int8
+        scale = 4 * (self.scale_k.size + self.scale_v.size)       # f32
+        tail = (self.tail_k.size + self.tail_v.size) * self.tail_k.dtype.itemsize
+        return float(packed + scale + tail)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class CompressedKVCache:
+    """Per-model compressed KV store: a tuple of per-policy `KVSegment`s.
+
+    A uniform plan yields exactly one segment; the `packed_k`/.../`keep`
+    properties then expose its planes directly (the legacy single-store
+    view most tests and single-layer consumers use).  Non-uniform plans
+    have per-segment block geometry — iterate `segments`.
+    """
+
+    segments: tuple[KVSegment, ...]
+
+    def tree_flatten(self):
+        return (self.segments,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children[0]))
+
+    @classmethod
+    def from_arrays(cls, packed_k, scale_k, packed_v, scale_v, tail_k, tail_v,
+                    keep: int, backend: str | None = None) -> "CompressedKVCache":
+        """Single-segment (uniform-plan) cache from bare (L, B, ...) planes —
+        the legacy constructor shape, for consumers that flatten the cache
+        into its planes and rebuild it (e.g. the dry-run sharding driver)."""
+        return cls((KVSegment(packed_k, scale_k, packed_v, scale_v,
+                              tail_k, tail_v, keep=keep, start=0,
+                              stop=packed_k.shape[0], backend=backend),))
+
+    def _single(self) -> KVSegment:
+        if len(self.segments) != 1:
+            raise ValueError(
+                "cache has per-layer block geometry; iterate cache.segments")
+        return self.segments[0]
+
+    packed_k = property(lambda self: self._single().packed_k)
+    scale_k = property(lambda self: self._single().scale_k)
+    packed_v = property(lambda self: self._single().packed_v)
+    scale_v = property(lambda self: self._single().scale_v)
+    tail_k = property(lambda self: self._single().tail_k)
+    tail_v = property(lambda self: self._single().tail_v)
+    keep = property(lambda self: self._single().keep)
+
+    @property
+    def n_layers(self) -> int:
+        return self.segments[-1].stop
+
+    @property
+    def keeps(self) -> tuple[int, ...]:
+        """Per-layer kept corner sizes (the materialized plan)."""
+        return tuple(s.keep for s in self.segments
+                     for _ in range(s.stop - s.start))
 
     @property
     def max_seq(self) -> int:
-        return self.packed_k.shape[2] * BLOCK
+        return self.segments[0].packed_k.shape[2] * BLOCK
 
     def nbytes_per_token_per_layer(self) -> float:
-        """Compressed bytes per token per layer (both K and V)."""
-        _, _, _, hkv, nhd, k, _ = self.packed_k.shape
-        per_block = hkv * nhd * (k * k + 4)  # int8 corner + f32 scale
-        return 2 * per_block / BLOCK
+        """Mean compressed bytes per token per layer (both K and V)."""
+        total = 0.0
+        for s in self.segments:
+            _, _, _, hkv, nhd, k, _ = s.packed_k.shape
+            per_block = hkv * nhd * (k * k + 4)  # int8 corner + f32 scale
+            total += (s.stop - s.start) * 2 * per_block / BLOCK
+        return total / self.n_layers
+
+    def storage_stats(self, raw_dtype_bytes: int = 2) -> dict:
+        """Honest footprint of the pool vs a raw bf16 cache of equal shape."""
+        seg = self.segments[0]
+        _, b, ns, hkv, nhd, _, _ = seg.packed_k.shape
+        hd = nhd * BLOCK
+        kv_bytes = sum(s.nbytes() for s in self.segments)
+        raw = self.n_layers * b * (ns * BLOCK) * hkv * hd * raw_dtype_bytes * 2
+        return {
+            "kv_bytes": kv_bytes,
+            "raw_bytes": float(raw),
+            "ratio": kv_bytes / raw,
+            "keeps": self.keeps,
+        }
 
 
 def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
-                          dtype=jnp.bfloat16) -> CompressedKVCache:
+                          dtype=jnp.bfloat16,
+                          plan=None) -> CompressedKVCache:
+    """Allocate the pool per `plan` (legacy scalar `keep` => uniform plan)."""
     assert max_seq % BLOCK == 0
     hd = cfg.resolved_head_dim
     assert hd % BLOCK == 0, f"head_dim {hd} not 8-tileable"
-    l, hkv = cfg.n_layers, cfg.n_kv_heads
+    plan = plan_lib.as_plan(plan, keep=keep)
+    hkv = cfg.n_kv_heads
     ns, nh = max_seq // BLOCK, hd // BLOCK
-    mk = lambda: jnp.zeros((l, batch, ns, hkv, nh, keep, keep), jnp.int8)
-    sc = lambda: jnp.zeros((l, batch, ns, hkv, nh), jnp.float32)
-    tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
-    return CompressedKVCache(mk(), sc(), mk(), sc(), tl(), tl(), keep)
+    segments = []
+    for start, stop, pol in plan.segments(cfg.n_layers):
+        l, k = stop - start, pol.kv_keep
+        mk = lambda: jnp.zeros((l, batch, ns, hkv, nh, k, k), jnp.int8)
+        sc = lambda: jnp.zeros((l, batch, ns, hkv, nh), jnp.float32)
+        tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
+        segments.append(KVSegment(mk(), sc(), mk(), sc(), tl(), tl(),
+                                  keep=k, start=start, stop=stop,
+                                  backend=pol.backend))
+    return CompressedKVCache(tuple(segments))
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +258,7 @@ def update_layer(
     v_new: jax.Array,
     pos: jax.Array,    # (B,) per-slot absolute positions (scalar broadcasts)
     keep: int,
+    backend: str | None = None,
 ) -> dict[str, jax.Array]:
     """Write each row's new token into its own tail slot; flush per row.
 
@@ -178,8 +290,8 @@ def update_layer(
     def flush(args):
         pk, sk, pv, sv, tk, tv = args
         # (B, 8, Hkv, hd) -> (B, Hkv, 8, hd) planes -> one block per row
-        qk, sck = compress_kv_blocks(jnp.swapaxes(tk, 1, 2), keep)
-        qv, scv = compress_kv_blocks(jnp.swapaxes(tv, 1, 2), keep)
+        qk, sck = compress_kv_blocks(jnp.swapaxes(tk, 1, 2), keep, backend)
+        qv, scv = compress_kv_blocks(jnp.swapaxes(tv, 1, 2), keep, backend)
         # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, Hkv, hd/8, k, k)
         qk = jnp.swapaxes(qk, 1, 2)[:, 0]
         qv = jnp.swapaxes(qv, 1, 2)[:, 0]
@@ -229,6 +341,7 @@ def attend_compressed(
     *,
     kv_block: int = 1024,
     scale: float | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Online-softmax decode attention where K/V history is decompressed per
     chunk INSIDE the scan — compressed bytes are what stream from HBM.
@@ -262,10 +375,12 @@ def attend_compressed(
         kc = decompress_kv_blocks(
             jnp.swapaxes(sl(layer_cache["packed_k"]), 1, 2),
             jnp.swapaxes(sl(layer_cache["scale_k"]), 1, 2), jnp.float32,
+            backend,
         )                                                 # (B, Hkv, kv_block, hd)
         vc = decompress_kv_blocks(
             jnp.swapaxes(sl(layer_cache["packed_v"]), 1, 2),
             jnp.swapaxes(sl(layer_cache["scale_v"]), 1, 2), jnp.float32,
+            backend,
         )
         kr = _repeat_heads(kc, n_rep)                     # (B, H, kv_block, hd)
         vr = _repeat_heads(vc, n_rep)
@@ -328,7 +443,8 @@ def attend_auto(
         from repro.kernels.fused_attend import ops as fa_ops
 
         return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block)
-    return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block)
+    return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block,
+                             backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +456,7 @@ def prefill_compress(
     v: jax.Array,
     keep: int,
     pos: jax.Array | None = None,  # (B,) per-row prompt lengths; None => S
+    backend: str | None = None,
 ) -> dict[str, jax.Array]:
     """Compress a full prompt's K/V for one layer into cache layout.
 
@@ -360,8 +477,8 @@ def prefill_compress(
     """
     b, s = k.shape[:2]
     pos = as_pos_vec(s if pos is None else pos, b)
-    kq, ks = compress_kv_blocks(jnp.swapaxes(k, 1, 2), keep)  # (B,Hkv,S/8,hd/8,k,k)
-    vq, vs = compress_kv_blocks(jnp.swapaxes(v, 1, 2), keep)
+    kq, ks = compress_kv_blocks(jnp.swapaxes(k, 1, 2), keep, backend)  # (B,Hkv,S/8,hd/8,k,k)
+    vq, vs = compress_kv_blocks(jnp.swapaxes(v, 1, 2), keep, backend)
     # per-row raw tail: gather rows flushed .. flushed+7 (clamped; rows past
     # the prompt are masked at attend time by tail_pos <= pos)
     idx = (pos[:, None] // BLOCK) * BLOCK + jnp.arange(BLOCK)  # (B, 8)

@@ -129,9 +129,9 @@ def build_cell(api, mesh, shape_name: str, variant: str):
 
         def dec(p, t, c, q):
             import repro.core.kv_cache as kvc
-            cc = kvc.CompressedKVCache(
+            cc = kvc.CompressedKVCache.from_arrays(
                 c["packed_k"], c["scale_k"], c["packed_v"], c["scale_v"],
-                c["tail_k"], c["tail_v"], 4,
+                c["tail_k"], c["tail_v"], keep=4,
             )
             logits, nc = serve_engine.decode_step_compressed(p, t, cc, q, cfg)
             return logits, {

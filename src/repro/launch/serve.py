@@ -19,18 +19,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import plan as plan_lib
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models import api as model_api
 from repro.serve import engine as E
 
 
-def kv_bytes_per_token(cfg, compressed: bool, keep: int) -> float:
-    hd = cfg.resolved_head_dim
-    raw = 2 * cfg.n_kv_heads * hd * 2  # k+v bf16
+def kv_bytes_per_token(cfg, compressed: bool,
+                       plan: plan_lib.CompressionPlan) -> float:
     if not compressed:
-        return cfg.n_layers * raw
-    per_block = cfg.n_kv_heads * (hd // 8) * (keep * keep + 4)
-    return cfg.n_layers * 2 * per_block / 8
+        return plan_lib.raw_kv_bytes_per_token(cfg)
+    return plan.kv_bytes_per_token(cfg)
 
 
 def main(argv=None):
@@ -43,7 +42,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--kv-compress", action="store_true")
-    ap.add_argument("--kv-keep", type=int, default=4)
+    ap.add_argument("--kv-keep", type=int, default=4,
+                    help="legacy uniform keep (shim for --kv-plan)")
+    ap.add_argument("--kv-plan", default=None,
+                    help="per-layer CompressionPlan spec, e.g. "
+                         "'0-3:keep=6,4-:keep=3' (overrides --kv-keep)")
+    ap.add_argument("--kv-budget-mb", type=float, default=None,
+                    help="solve the plan from a KV byte budget instead "
+                         "(CompressionPlan.from_budget; overrides --kv-plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--scheduler", default="continuous",
                     choices=("continuous", "static"))
@@ -60,9 +66,14 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} has no decode path (encoder-decoder cap)")
 
     params = api.init(jax.random.PRNGKey(0))
+    if args.kv_budget_mb is not None:
+        plan = plan_lib.CompressionPlan.from_budget(
+            cfg, args.max_seq, args.kv_budget_mb * 1e6, batch=args.batch)
+    else:
+        plan = plan_lib.as_plan(args.kv_plan, keep=args.kv_keep)
     sc = E.ServeConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
-        kv_compress=args.kv_compress, kv_keep=args.kv_keep,
+        kv_compress=args.kv_compress, plan=plan,
         temperature=args.temperature,
     )
     eng = E.Engine(api, params, sc, batch=args.batch, scheduler=args.scheduler)
@@ -85,13 +96,13 @@ def main(argv=None):
     # from the decode-loop rate
     dec_tok = st["tokens_out"] - st["requests"]
     dec_tps = dec_tok / st["decode_s"] if st["steps"] else 0.0
-    print(f"arch={cfg.name} kv_compress={args.kv_compress} keep={args.kv_keep} "
-          f"scheduler={eng.scheduler}")
+    print(f"arch={cfg.name} kv_compress={args.kv_compress} "
+          f"plan={plan.to_spec()} scheduler={eng.scheduler}")
     print(f"requests={st['requests']} decode_steps={st['steps']} "
           f"tokens_out={st['tokens_out']} decode_tok/s={dec_tps:.1f} "
           f"slot_util={eng.slot_utilization():.2f} prefill_s={st['prefill_s']:.2f}")
-    raw_b = kv_bytes_per_token(cfg, False, args.kv_keep)
-    cmp_b = kv_bytes_per_token(cfg, True, args.kv_keep)
+    raw_b = kv_bytes_per_token(cfg, False, plan)
+    cmp_b = kv_bytes_per_token(cfg, True, plan)
     print(f"KV bytes/token: raw {raw_b:.0f} vs compressed {cmp_b:.0f} "
           f"({raw_b / cmp_b:.1f}x) -> at {args.max_seq} ctx x batch "
           f"{args.batch}: {raw_b*args.max_seq*args.batch/1e6:.1f} MB vs "

@@ -67,7 +67,12 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--remat", default="compressed",
                     choices=["none", "full", "compressed"])
-    ap.add_argument("--compress-keep", type=int, default=4)
+    ap.add_argument("--compress-plan", default=None,
+                    help="per-layer CompressionPlan spec for ActCompress, "
+                         "e.g. '0-3:keep=6,4-:keep=3' (overrides "
+                         "--compress-keep; see repro.codec.plan)")
+    ap.add_argument("--compress-keep", "--compress_keep", type=int, default=4,
+                    help="legacy uniform keep (shim for --compress-plan)")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -90,6 +95,7 @@ def main(argv=None):
     tc = train_step.TrainConfig(
         microbatches=args.microbatches,
         remat=args.remat,
+        plan=args.compress_plan,           # None => uniform(compress_keep)
         compress_keep=args.compress_keep,
         grad_compress=args.grad_compress,
         optimizer=AdamWConfig(lr=args.lr, warmup_steps=20,

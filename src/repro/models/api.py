@@ -17,6 +17,7 @@ decode shapes are skipped (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -24,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import plan as plan_lib
 from repro.configs.base import SHAPES, ArchConfig, get_config
 from repro.models import rwkv as rwkv_lib
 from repro.models import ssm as ssm_lib
@@ -112,6 +114,40 @@ class SkippedShape(Exception):
 
 
 # ---------------------------------------------------------------------------
+# Central compression-kwarg handling (one sanctioned `plan=` argument)
+# ---------------------------------------------------------------------------
+
+# families whose forward routes through T.forward and supports ActCompress
+_PLAN_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _with_plan_handling(api: ModelAPI) -> ModelAPI:
+    """Normalize compression kwargs once, centrally, for every family.
+
+    `plan=` is the sanctioned argument; `compress_keep=`/`codec_backend=`
+    are the legacy scalar shims (compress_keep=k == CompressionPlan.uniform(k)).
+    Families that compress (transformers) get the resolved plan; families
+    that don't (whisper/zamba/rwkv) simply never see the kwargs — this
+    replaces the per-adapter kwarg filtering the adapters used to duplicate.
+    """
+    supports_plan = api.cfg.family in _PLAN_FAMILIES
+
+    def wrap(fn):
+        def wrapped(params, batch, *, plan=None, compress_keep=None,
+                    codec_backend=None, **kw):
+            if plan is not None or compress_keep is not None \
+                    or codec_backend is not None:
+                if supports_plan:
+                    kw["plan"] = plan_lib.as_plan(plan, keep=compress_keep,
+                                                  backend=codec_backend)
+            return fn(params, batch, **kw)
+
+        return wrapped
+
+    return dataclasses.replace(api, forward=wrap(api.forward), loss=wrap(api.loss))
+
+
+# ---------------------------------------------------------------------------
 # Family adapters
 # ---------------------------------------------------------------------------
 
@@ -150,8 +186,6 @@ def _whisper_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
         return T.init_encdec(key, cfg, dtype)
 
     def forward(params, batch, **kw):
-        kw.pop("compress_keep", None)
-        kw.pop("codec_backend", None)
         return T.encdec_forward(params, batch["frames"], batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):
@@ -163,8 +197,6 @@ def _whisper_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
 
 def _zamba_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
     def forward(params, batch, **kw):
-        kw.pop("compress_keep", None)
-        kw.pop("codec_backend", None)
         return ssm_lib.zamba_forward(params, batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):
@@ -183,8 +215,6 @@ def _zamba_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
 
 def _rwkv_api(arch_id: str, cfg: ArchConfig) -> ModelAPI:
     def forward(params, batch, **kw):
-        kw.pop("compress_keep", None)
-        kw.pop("codec_backend", None)
         return rwkv_lib.rwkv_forward(params, batch["tokens"], cfg, **kw)
 
     def loss(params, batch, **kw):
@@ -206,16 +236,18 @@ def build(arch_id: str, cfg: ArchConfig | None = None) -> ModelAPI:
     arch_id = arch_id.replace("-", "_")
     cfg = cfg or get_config(arch_id)
     if cfg.family in ("dense", "moe"):
-        return _lm_api(arch_id, cfg)
-    if cfg.family == "vlm":
-        return _vlm_loss_api(arch_id, cfg)
-    if cfg.family == "audio":
-        return _whisper_api(arch_id, cfg)
-    if cfg.family == "hybrid":
-        return _zamba_api(arch_id, cfg)
-    if cfg.family == "ssm":
-        return _rwkv_api(arch_id, cfg)
-    raise ValueError(f"unknown family {cfg.family}")
+        api = _lm_api(arch_id, cfg)
+    elif cfg.family == "vlm":
+        api = _vlm_loss_api(arch_id, cfg)
+    elif cfg.family == "audio":
+        api = _whisper_api(arch_id, cfg)
+    elif cfg.family == "hybrid":
+        api = _zamba_api(arch_id, cfg)
+    elif cfg.family == "ssm":
+        api = _rwkv_api(arch_id, cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return _with_plan_handling(api)
 
 
 def build_reduced(arch_id: str) -> ModelAPI:

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codec as codec_lib
+from repro.codec import plan as plan_lib
 from repro.core import compressor
 
 Params = dict
@@ -96,18 +97,43 @@ def avgpool_global(x):
 class CompressionSchedule:
     """Which fusion layers to compress and at what level (paper §III-B).
 
-    The paper compresses the first `n_layers` fusion layers; `levels` follows
-    its off-line regression: aggressive (0) early, gentle (3) deeper.
+    A thin alias over `repro.codec.plan.CompressionPlan`: the per-fusion-
+    layer policy lives in `plan` (the same object the transformer consumers
+    take), and `policy(idx)` translates each `LayerPolicy` to the paper's
+    2-bit quantization level via its keep size.  The default plan is the
+    paper's off-line regression — aggressive (level 0 = keep 2) early,
+    gentle (level 3 = keep 6) deeper, uncompressed past `n_layers`.
     """
 
     n_layers: int = 10
     bits: int = 8
+    plan: plan_lib.CompressionPlan | None = None
+
+    def __post_init__(self):
+        if self.plan is None:
+            lp = lambda keep: plan_lib.LayerPolicy(keep=keep, bits=self.bits)
+            self.plan = plan_lib.CompressionPlan(rules=(
+                (self.n_layers, None, plan_lib.LayerPolicy(enabled=False)),
+                (0, 2, lp(2)),   # level 0
+                (2, 5, lp(3)),   # level 1
+                (5, 8, lp(4)),   # level 2
+                (8, None, lp(6)),  # level 3
+            ))
+
+    @classmethod
+    def from_plan(cls, plan: plan_lib.CompressionPlan) -> "CompressionSchedule":
+        return cls(plan=plan)
 
     def policy(self, idx: int) -> compressor.CompressionPolicy | None:
-        if idx >= self.n_layers:
+        lp = self.plan.policy(idx)
+        if not lp.enabled:
             return None
-        level = 0 if idx < 2 else (1 if idx < 5 else (2 if idx < 8 else 3))
-        return compressor.CompressionPolicy(level=level, bits=self.bits)
+        return compressor.CompressionPolicy(level=lp.paper_level, bits=lp.bits)
+
+
+# the accelerator literature calls the conv[+bn][+act][+pool] group a fusion
+# layer; expose the schedule under that name too
+FusionSchedule = CompressionSchedule
 
 
 class FusionStats:
@@ -143,9 +169,14 @@ def fusion_boundary(
     NHWC -> (N, C, H, W): the codec's leading-dim handling folds the whole
     (N, C) plane batch into one backend call (fused Pallas kernels on TPU,
     reference einsum elsewhere) — no per-plane Python loop or reshape.
+
+    `schedule` may be a CompressionSchedule or a bare CompressionPlan (the
+    transformer consumers' policy object works here unchanged).
     """
     if schedule is None:
         return x
+    if isinstance(schedule, plan_lib.CompressionPlan):
+        schedule = CompressionSchedule.from_plan(schedule)
     policy = schedule.policy(idx)
     if policy is None:
         if stats is not None:

@@ -9,7 +9,11 @@ Remat policies (train):
   "full"       — jax.checkpoint per layer (save residual stream only)
   "compressed" — ActCompress (core/activation.py): residuals saved in
                  DCT-truncated int8 — the paper's interlayer compression
-                 applied to the saved-for-backward activations.
+                 applied to the saved-for-backward activations.  The kept
+                 corner is PER LAYER: `plan=` takes a
+                 repro.codec.plan.CompressionPlan and the layer scan splits
+                 into one scan per contiguous equal-policy segment (the
+                 legacy scalar `compress_keep` is a uniform-plan shim).
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import plan as plan_lib
 from repro.core import kv_cache as kvc
 from repro.core.activation import compressed_checkpoint
 from repro.models import layers as L
@@ -92,17 +97,18 @@ def moe_layer(p, x, positions, cfg):
     return x
 
 
-def _wrap_remat(body, remat: str, compress_keep: int = 4,
-                codec_backend: str | None = None):
+def _wrap_remat(body, remat: str, policy: plan_lib.LayerPolicy | None = None):
     # both remat modes route through the custom_vjp wrapper so the per-layer
     # param cotangents are cast to bf16 BEFORE XLA's in-loop DP reduction
     # (halves gradient wire; accumulation stays f32 in the train step)
     if remat == "full":
         return compressed_checkpoint(body, keep=None, grad_dtype=jnp.bfloat16)
     if remat == "compressed":
-        return compressed_checkpoint(body, keep=compress_keep,
+        policy = policy if policy is not None else plan_lib.LayerPolicy()
+        return compressed_checkpoint(body,
+                                     keep=policy.keep if policy.enabled else None,
                                      grad_dtype=jnp.bfloat16,
-                                     backend=codec_backend)
+                                     backend=policy.backend)
     return body
 
 
@@ -158,13 +164,16 @@ def forward(
     *,
     prefix_embeds: jax.Array | None = None,  # (B, P, D) modality stub
     remat: str = "full",
-    compress_keep: int = 4,
-    codec_backend: str | None = None,        # ActCompress codec backend
+    plan=None,                               # ActCompress CompressionPlan
+    compress_keep: int = 4,                  # legacy shim => uniform plan
+    codec_backend: str | None = None,        # legacy shim => plan backend
 ) -> jax.Array:
     """Training/prefill forward -> logits (B, S_total, V)."""
     x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    plan = plan_lib.as_plan(plan, keep=compress_keep, backend=codec_backend) \
+        if remat == "compressed" else None
 
-    def scan_layers(stacked, x, body):
+    def scan_layers(stacked, x, body, layer0):
         # positions derived from h inside the body: the remat wrappers
         # (custom_vjp in particular) must not close over tracers.
         def layer_body(p, h):
@@ -172,20 +181,31 @@ def forward(
             positions = jnp.arange(h.shape[1])[None, :]
             return body(p, h, positions, cfg)
 
-        wrapped = _wrap_remat(layer_body, remat, compress_keep, codec_backend)
+        def run(x, stk, wrapped):
+            def step(h, p):
+                return wrapped(p, h), None
 
-        def step(h, p):
-            return wrapped(p, h), None
+            x, _ = jax.lax.scan(step, x, stk)
+            return x
 
-        x, _ = jax.lax.scan(step, x, stacked)
+        if plan is None:
+            return run(x, stacked, _wrap_remat(layer_body, remat))
+        # one scan per contiguous equal-policy segment: the per-layer keep
+        # is static (it sizes the saved residual), so it cannot ride inside
+        # a single scan over all layers
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for start, stop, pol in plan.segments(layer0 + n, start=layer0):
+            sub = jax.tree.map(lambda p: p[start - layer0:stop - layer0], stacked)
+            x = run(x, sub, _wrap_remat(layer_body, remat, pol))
         return x
 
     if cfg.family == "moe":
-        if "dense_layers" in params:
-            x = scan_layers(params["dense_layers"], x, dense_layer)
-        x = scan_layers(params["moe_layers"], x, moe_layer)
+        nk = cfg.first_k_dense if "dense_layers" in params else 0
+        if nk:
+            x = scan_layers(params["dense_layers"], x, dense_layer, 0)
+        x = scan_layers(params["moe_layers"], x, moe_layer, nk)
     else:
-        x = scan_layers(params["layers"], x, dense_layer)
+        x = scan_layers(params["layers"], x, dense_layer, 0)
     return unembed(params, x, cfg)
 
 

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import plan as plan_lib
 from repro.core import kv_cache as kvc
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -49,8 +50,21 @@ Params = dict[str, Any]
 # ---------------------------------------------------------------------------
 
 def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
-                          dtype=jnp.bfloat16):
-    return kvc.init_compressed_cache(cfg, batch, max_seq, keep=keep, dtype=dtype)
+                          dtype=jnp.bfloat16, plan=None):
+    return kvc.init_compressed_cache(cfg, batch, max_seq, keep=keep,
+                                     dtype=dtype, plan=plan)
+
+
+def _param_runs(cfg, params):
+    """Stacked-layer param runs in absolute layer order: (stack, start, stop)."""
+    if cfg.family == "moe":
+        nk = cfg.first_k_dense
+        runs = []
+        if nk:
+            runs.append((params["dense_layers"], 0, nk))
+        runs.append((params["moe_layers"], nk, cfg.n_layers))
+        return runs
+    return [(params["layers"], 0, cfg.n_layers)]
 
 
 def decode_step_compressed(
@@ -66,66 +80,62 @@ def decode_step_compressed(
     """One-token decode against the DCT-compressed KV store.
 
     Every slot writes its token at its own `pos[b]` (own tail slot, own
-    flush) and attends under its own watermark. Attention and the block
-    codec dispatch through repro.codec: the fused decompress+attend Pallas
-    kernel on TPU, the pure-JAX scan elsewhere.
+    flush) and attends under its own watermark. The kept corner size is per
+    layer: the cache's segments carry the materialized CompressionPlan, and
+    the layer scan runs once per (segment x param-stack) intersection with
+    that segment's static keep and backend. Attention and the block codec
+    dispatch through repro.codec: the fused decompress+attend Pallas kernel
+    on TPU, the pure-JAX scan elsewhere.
     """
     assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
-    keep = cache.keep
     pos = kvc.as_pos_vec(pos, token.shape[0])
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
     positions = pos[:, None]  # (B, 1) per-row rope positions
     norm = T._norm(cfg)
     hd = cfg.resolved_head_dim
+    runs = _param_runs(cfg, params)
 
-    def layer_step(h, inp):
-        p, lc = inp["p"], inp["cache"]
-        hn = norm(p["ln1"], h)
-        b, s, _ = hn.shape
-        q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
-        q = L.apply_rope(q, positions, cfg.rope_theta)
-        k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
-        lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep)
-        attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
-                               backend=codec_backend)
-        h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
-        if "moe" in p:
-            h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
-        else:
-            h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
-        return h, lc2
+    def make_layer_step(keep, backend):
+        def layer_step(h, inp):
+            p, lc = inp["p"], inp["cache"]
+            hn = norm(p["ln1"], h)
+            b, s, _ = hn.shape
+            q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
+            lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend)
+            attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
+                                   backend=backend)
+            h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
+            if "moe" in p:
+                h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
+            else:
+                h = h + L.mlp(p["mlp"], norm(p["ln2"], h), cfg)
+            return h, lc2
 
-    cache_tree = {
-        "packed_k": cache.packed_k, "scale_k": cache.scale_k,
-        "packed_v": cache.packed_v, "scale_v": cache.scale_v,
-        "tail_k": cache.tail_k, "tail_v": cache.tail_v,
-    }
+        return layer_step
 
-    def run(x, stacked, ct):
-        return jax.lax.scan(layer_step, x, {"p": stacked, "cache": ct})
-
-    if cfg.family == "moe":
-        nk = cfg.first_k_dense
+    new_segments = []
+    for seg in cache.segments:
+        layer_step = make_layer_step(
+            seg.keep, seg.backend if seg.backend is not None else codec_backend)
+        seg_tree = seg.as_tree()
         parts = []
-        if nk:
-            ct_d = jax.tree.map(lambda c: c[:nk], cache_tree)
-            x, nc_d = run(x, params["dense_layers"], ct_d)
-            parts.append(nc_d)
-        ct_m = jax.tree.map(lambda c: c[nk:], cache_tree)
-        x, nc_m = run(x, params["moe_layers"], ct_m)
-        parts.append(nc_m)
-        new_tree = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts) \
-            if len(parts) > 1 else parts[0]
-    else:
-        x, new_tree = run(x, params["layers"], cache_tree)
+        for stack, ps, pe in runs:
+            s0, s1 = max(seg.start, ps), min(seg.stop, pe)
+            if s0 >= s1:
+                continue
+            pslice = jax.tree.map(lambda p: p[s0 - ps:s1 - ps], stack)
+            cslice = jax.tree.map(lambda c: c[s0 - seg.start:s1 - seg.start],
+                                  seg_tree)
+            x, nc = jax.lax.scan(layer_step, x, {"p": pslice, "cache": cslice})
+            parts.append(nc)
+        new_tree = parts[0] if len(parts) == 1 else \
+            jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        new_segments.append(seg.replace_arrays(new_tree))
 
     logits = T.unembed(params, x, cfg)[:, 0]
-    new_cache = kvc.CompressedKVCache(
-        new_tree["packed_k"], new_tree["scale_k"],
-        new_tree["packed_v"], new_tree["scale_v"],
-        new_tree["tail_k"], new_tree["tail_v"], keep,
-    )
-    return logits, new_cache
+    return logits, kvc.CompressedKVCache(tuple(new_segments))
 
 
 def prefill_compressed(
@@ -135,6 +145,7 @@ def prefill_compressed(
     max_seq: int,
     keep: int = 4,
     *,
+    plan=None,
     lengths: jax.Array | None = None,  # (B,) valid prompt tokens per row
     dtype=jnp.bfloat16,
 ) -> tuple[jax.Array, kvc.CompressedKVCache]:
@@ -144,34 +155,39 @@ def prefill_compressed(
     drives the per-row tail extraction — full 8-token blocks below the
     row's watermark are DCT-packed, the partial remainder lands raw in the
     row's tail ring. Defaults to the full token-array length for every row
-    (the lock-step case).
+    (the lock-step case).  Each plan segment bulk-compresses its own layer
+    range with its own keep (legacy scalar `keep` => uniform plan).
 
     Only the prompt's own blocks run through the codec; the rest of the
     max_seq store is zero-filled directly, so admission cost scales with
     the prompt, not the pool depth.
     """
     assert cfg.attn_type == "gqa"
+    plan = plan_lib.as_plan(plan, keep=keep)
     b, s = tokens.shape
     lengths = kvc.as_pos_vec(s if lengths is None else lengths, b)
     logits, raw = T.prefill(params, tokens, cfg, max_seq, cache_dtype=jnp.float32)
     nb_total = max_seq // kvc.BLOCK
     nb_used = min(-(-s // kvc.BLOCK), nb_total)  # blocks covering the prompt
-    comp = jax.vmap(
-        lambda k, v: kvc.prefill_compress(k, v, keep, pos=lengths)
-    )(raw["k"][:, :, :nb_used * kvc.BLOCK],
-      raw["v"][:, :, :nb_used * kvc.BLOCK])  # vmap over layers
-    if nb_used < nb_total:  # zero-fill the unwritten block range (axis 2)
-        padb = lambda a: jnp.pad(
-            a, ((0, 0), (0, 0), (0, nb_total - nb_used)) + ((0, 0),) * (a.ndim - 3))
-        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
-            comp[key] = padb(comp[key])
-    cache = kvc.CompressedKVCache(
-        packed_k=comp["packed_k"], scale_k=comp["scale_k"],
-        packed_v=comp["packed_v"], scale_v=comp["scale_v"],
-        tail_k=comp["tail_k"].astype(dtype), tail_v=comp["tail_v"].astype(dtype),
-        keep=keep,
-    )
-    return logits, cache
+    segments = []
+    for start, stop, pol in plan.segments(cfg.n_layers):
+        kseg = pol.kv_keep
+        comp = jax.vmap(
+            lambda k, v: kvc.prefill_compress(k, v, kseg, pos=lengths,
+                                              backend=pol.backend)
+        )(raw["k"][start:stop, :, :nb_used * kvc.BLOCK],
+          raw["v"][start:stop, :, :nb_used * kvc.BLOCK])  # vmap over layers
+        if nb_used < nb_total:  # zero-fill the unwritten block range (axis 2)
+            padb = lambda a: jnp.pad(
+                a, ((0, 0), (0, 0), (0, nb_total - nb_used)) + ((0, 0),) * (a.ndim - 3))
+            for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+                comp[key] = padb(comp[key])
+        segments.append(kvc.KVSegment(
+            comp["packed_k"], comp["scale_k"], comp["packed_v"], comp["scale_v"],
+            comp["tail_k"].astype(dtype), comp["tail_v"].astype(dtype),
+            keep=kseg, start=start, stop=stop, backend=pol.backend,
+        ))
+    return logits, kvc.CompressedKVCache(tuple(segments))
 
 
 # ---------------------------------------------------------------------------
@@ -183,11 +199,17 @@ class ServeConfig:
     max_seq: int = 2048
     max_new_tokens: int = 64
     kv_compress: bool = False
-    kv_keep: int = 4
+    kv_keep: int = 4             # legacy scalar shim => CompressionPlan.uniform
+    plan: Any = None             # CompressionPlan | spec string | int keep
     temperature: float = 0.0     # 0 => greedy
     eos_id: int = -1             # -1 => never stops early
     kv_block: int = 1024
     codec_backend: str | None = None  # None = auto (repro.codec.dispatch)
+
+    def resolved_plan(self) -> plan_lib.CompressionPlan:
+        """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
+        return plan_lib.as_plan(self.plan, keep=self.kv_keep,
+                                backend=self.codec_backend)
 
 
 def make_steps(api: ModelAPI, sc: ServeConfig):
@@ -207,16 +229,19 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
         cfg.resolved_head_dim % 8 == 0 and cfg.vec_pos_decode
 
     if use_comp:
+        plan = sc.resolved_plan()
+
         def prefill_fn(params, tokens, lengths=None):
-            return prefill_compressed(params, tokens, cfg, sc.max_seq, sc.kv_keep,
-                                      lengths=lengths)
+            return prefill_compressed(params, tokens, cfg, sc.max_seq,
+                                      plan=plan, lengths=lengths)
 
         def decode_fn(params, token, cache, pos):
             return decode_step_compressed(params, token, cache, pos, cfg,
                                           kv_block=sc.kv_block,
                                           codec_backend=sc.codec_backend)
 
-        cache_init = lambda b: kvc.init_compressed_cache(cfg, b, sc.max_seq, sc.kv_keep)
+        cache_init = lambda b: kvc.init_compressed_cache(cfg, b, sc.max_seq,
+                                                         plan=plan)
         return prefill_fn, decode_fn, cache_init, True
 
     if cfg.vec_pos_decode:

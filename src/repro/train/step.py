@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.codec import plan as plan_lib
 from repro.core import grad_comp
 from repro.models.api import ModelAPI
 from repro.optim import adamw
@@ -38,8 +39,10 @@ Params = dict[str, Any]
 class TrainConfig:
     microbatches: int = 1
     remat: str = "full"            # none | full | compressed (ActCompress)
-    compress_keep: int = 4         # ActCompress kept corner k
-    codec_backend: Any = None      # ActCompress codec backend override
+    plan: Any = None               # ActCompress per-layer CompressionPlan
+                                   # (plan object | spec string | int keep)
+    compress_keep: int = 4         # legacy scalar shim => uniform plan
+    codec_backend: Any = None      # legacy backend shim => plan backend
                                    # (None = auto per repro.codec.dispatch)
     grad_compress: bool = False    # cross-pod DCT gradient exchange
     grad_compress_keep: int = 5
@@ -113,11 +116,15 @@ def make_train_step(api: ModelAPI, mesh: Mesh, tc: TrainConfig):
     The caller jits it with in/out shardings from state_specs/batch_specs.
     """
     n_micro = tc.microbatches
+    # one plan object from config to kernel; the scalar compress_keep /
+    # codec_backend fields are uniform-plan shims
+    plan = plan_lib.as_plan(tc.plan, keep=tc.compress_keep,
+                            backend=tc.codec_backend) \
+        if tc.remat == "compressed" else None
 
     def loss_fn(params, mb):
-        loss, metrics = api.loss(params, mb, remat=tc.remat,
-                                 compress_keep=tc.compress_keep,
-                                 codec_backend=tc.codec_backend)
+        kw = {"plan": plan} if plan is not None else {}
+        loss, metrics = api.loss(params, mb, remat=tc.remat, **kw)
         return loss, metrics
 
     def accumulate_grads(params, batch):

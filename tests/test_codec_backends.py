@@ -171,9 +171,10 @@ def test_storage_stats_accounting():
     x = _rand((16, 16), seed=14)
     c = codec.compress(x, 4)
     stats = codec.storage_stats(c)
-    # 4 tiles * (16 int8 + 8 header bytes) vs 256 elements * 2 B
-    assert abs(stats["bytes_per_element"] - 24 / 64) < 1e-9
-    assert abs(stats["ratio"] - (4 * (16 * 8 + 64)) / (256 * 16)) < 1e-9
+    # 4 tiles * (16 int8 + 4 header bytes: f32 scale only, the always-zero
+    # zero-point plane is not charged) vs 256 elements * 2 B
+    assert abs(stats["bytes_per_element"] - 20 / 64) < 1e-9
+    assert abs(stats["ratio"] - (4 * (16 * 8 + 32)) / (256 * 16)) < 1e-9
 
 
 def test_gradient_flows_through_reference_backend():
@@ -193,7 +194,7 @@ def test_compressor_facade_routes_through_codec():
     c = compressor.compress_truncated(x, keep=4)
     assert isinstance(c, codec.TruncatedCompressed)
     assert c.coefs.dtype == jnp.int8 and c.coefs.shape[-2:] == (4, 4)
-    assert abs(c.nbytes_per_element() - 24 / 64) < 1e-9
+    assert abs(c.nbytes_per_element() - 20 / 64) < 1e-9
     y = compressor.decompress_truncated(c)
     assert y.shape == x.shape
     pol = compressor.CompressionPolicy(level=1)
