@@ -1,7 +1,8 @@
 """Serving throughput: static lock-step vs continuous batching over the
 compressed KV pool (qwen2_0_5b-shaped configs, CPU interpret mode).
 
-    PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
+    PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke] \
+        [--mesh 4x1]
 
 Emits benchmarks/artifacts/serve_throughput.json with tokens/s and
 slot-utilization per scheduler. The point being measured: with per-slot
@@ -9,6 +10,11 @@ positions each pool slot is occupied exactly as long as its request lives
 (the paper's dynamic feature-map buffer allocation, serving edition), so a
 mixed workload finishes in fewer decode steps at higher slot utilization
 than the wave-at-a-time baseline.
+
+`--mesh DATAxMODEL` runs both schedulers on a host device mesh (slots on
+data, heads on model) and records the mesh axis sizes plus the per-device
+slice of the KV pool in the artifact — needs that many local devices (CI
+forces 4 with XLA_FLAGS=--xla_force_host_platform_device_count=4).
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import api as model_api
+from repro.parallel import mesh as mesh_lib
 from repro.serve import engine as E
 
 ART = pathlib.Path(__file__).parent / "artifacts"
@@ -49,7 +56,7 @@ def run_one(api, params, sc, batch, scheduler, workload_args):
     st = eng.stats
     # first token per request comes from prefill logits, not the decode loop
     dec_tok = st["tokens_out"] - st["requests"]
-    return {
+    return eng, {
         "scheduler": eng.scheduler,
         "requests": st["requests"],
         "tokens_out": st["tokens_out"],
@@ -71,11 +78,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--kv-keep", type=int, default=8)
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serve mesh, e.g. 4x1 (default: none)")
     args = ap.parse_args(argv)
 
     cfg = get_config("qwen2_0_5b").reduced()
     api = model_api.build("qwen2_0_5b", cfg)
     params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    mesh = mesh_lib.make_serve_mesh(args.mesh)
 
     if args.smoke:
         n_req, prompt_hi, new_hi, max_seq = 5, 12, 6, 48
@@ -83,19 +93,28 @@ def main(argv=None):
         n_req, prompt_hi, new_hi, max_seq = args.requests, 24, 16, 96
 
     sc = E.ServeConfig(max_seq=max_seq, kv_compress=True, kv_keep=args.kv_keep,
-                       codec_backend="reference")
+                       codec_backend="reference", mesh=mesh)
     workload = (n_req, prompt_hi, new_hi)
 
-    rows = [run_one(api, params, sc, args.batch, sched, workload)
-            for sched in ("static", "continuous")]
+    engines_rows = [run_one(api, params, sc, args.batch, sched, workload)
+                    for sched in ("static", "continuous")]
+    rows = [row for _, row in engines_rows]
 
     stat, cont = rows
+    # mesh provenance + the per-device slice of the sharded KV pool (the
+    # banked-buffer accounting: what one "bank" actually holds)
+    pool = engines_rows[0][0].kv_pool_stats()
+    mesh_axes = {a: int(mesh.shape[a]) for a in mesh.axis_names} \
+        if mesh is not None else None
     summary = {
         "arch": cfg.name,
         "batch": args.batch,
         "kv_keep": args.kv_keep,
         "max_seq": max_seq,
         "smoke": bool(args.smoke),
+        "mesh": mesh_axes,
+        "kv_pool_bytes": pool["kv_pool_bytes"],
+        "kv_bytes_per_device": round(pool["kv_bytes_per_device"], 1),
         "step_reduction": round(
             1.0 - cont["decode_steps"] / max(stat["decode_steps"], 1), 4),
         "rows": rows,
@@ -105,7 +124,9 @@ def main(argv=None):
     out.write_text(json.dumps(summary, indent=2) + "\n")
 
     print(f"arch={cfg.name} batch={args.batch} requests={n_req} "
-          f"kv_keep={args.kv_keep} (compressed pool)")
+          f"kv_keep={args.kv_keep} mesh={mesh_lib.mesh_desc(mesh)} "
+          f"(compressed pool, {pool['kv_bytes_per_device']/1e3:.1f} kB KV "
+          f"per device)")
     for r in rows:
         print(f"  {r['scheduler']:<11} steps={r['decode_steps']:<4} "
               f"slot_util={r['slot_utilization']:.2f} "

@@ -50,8 +50,12 @@ import numpy as np
 
 from repro import codec as codec_lib
 from repro.codec import plan as plan_lib
+from repro.parallel.sharding import attn_hint, logical as shard_hint
 
 BLOCK = 8
+
+_SEGMENT_FIELDS = ("packed_k", "scale_k", "packed_v", "scale_v",
+                   "tail_k", "tail_v")
 
 
 def as_pos_vec(pos: jax.Array | int, batch: int) -> jax.Array:
@@ -93,7 +97,7 @@ def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
 # Cache container
 # ---------------------------------------------------------------------------
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclass
 class KVSegment:
     """Compressed store for one contiguous run of layers sharing a policy.
@@ -102,6 +106,10 @@ class KVSegment:
       packed_k/v : (Lseg, B, S/8, Hkv, hd/8, k, k) int8
       scale_k/v  : (Lseg, B, S/8, Hkv, hd/8)       f32
       tail_k/v   : (Lseg, B, 8, Hkv, hd)           raw dtype
+
+    Registered WITH key paths so `parallel.sharding.cache_specs` can dispatch
+    on each plane's field name straight off the cache pytree — one spec rule
+    set covers the dict form (dry-run) and the segment form (serve engine).
     """
 
     packed_k: jax.Array
@@ -116,10 +124,13 @@ class KVSegment:
     backend: str | None = None  # static: codec backend (None = auto)
 
     def tree_flatten(self):
-        return (
-            self.packed_k, self.scale_k, self.packed_v, self.scale_v,
-            self.tail_k, self.tail_v,
-        ), (self.keep, self.start, self.stop, self.backend)
+        return tuple(getattr(self, f) for f in _SEGMENT_FIELDS), \
+            (self.keep, self.start, self.stop, self.backend)
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return tuple((ga(f), getattr(self, f)) for f in _SEGMENT_FIELDS), \
+            (self.keep, self.start, self.stop, self.backend)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -144,7 +155,7 @@ class KVSegment:
         return float(packed + scale + tail)
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclass
 class CompressedKVCache:
     """Per-model compressed KV store: a tuple of per-policy `KVSegment`s.
@@ -159,6 +170,9 @@ class CompressedKVCache:
 
     def tree_flatten(self):
         return (self.segments,), ()
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("segments"), self.segments),), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -277,12 +291,18 @@ def update_layer(
     pos = as_pos_vec(pos, b)
     rows = jnp.arange(b)
     slot = jnp.mod(pos, BLOCK)
+    # per-row scatters: the row index IS the batch index, so under a
+    # slot-sharded pool (data axes on B) every write lands on the shard that
+    # owns the slot — constrain the results so GSPMD keeps it that way
+    # instead of round-tripping the tail ring through a gather.
     tail_k = layer_cache["tail_k"].at[rows, slot].set(
         k_new[:, 0].astype(layer_cache["tail_k"].dtype)
     )
     tail_v = layer_cache["tail_v"].at[rows, slot].set(
         v_new[:, 0].astype(layer_cache["tail_v"].dtype)
     )
+    tail_k = shard_hint(tail_k, "batch", None, "model", None)
+    tail_v = shard_hint(tail_v, "batch", None, "model", None)
 
     ns = layer_cache["packed_k"].shape[1]
     flush_row = slot == BLOCK - 1
@@ -317,6 +337,14 @@ def update_layer(
             tail_k, tail_v,
         ),
     )
+    # packed/scale layout must MATCH cache_specs: heads on `model` when they
+    # divide it, else the S/8 block axis (attn_hint implements exactly that
+    # fallback) — a plain heads-only hint would conflict with the pool specs
+    # for non-dividing head counts and force a full-store reshard per step
+    pk = attn_hint(pk, s_axis=1, h_axis=2)
+    pv = attn_hint(pv, s_axis=1, h_axis=2)
+    sk = attn_hint(sk, s_axis=1, h_axis=2)
+    sv = attn_hint(sv, s_axis=1, h_axis=2)
     return dict(packed_k=pk, scale_k=sk, packed_v=pv, scale_v=sv,
                 tail_k=tail_k, tail_v=tail_v)
 
@@ -382,6 +410,8 @@ def attend_compressed(
             jnp.swapaxes(sl(layer_cache["scale_v"]), 1, 2), jnp.float32,
             backend,
         )
+        kc = attn_hint(kc, s_axis=2, h_axis=1)  # heads else kv_block on model
+        vc = attn_hint(vc, s_axis=2, h_axis=1)
         kr = _repeat_heads(kc, n_rep)                     # (B, H, kv_block, hd)
         vr = _repeat_heads(vc, n_rep)
         kv_pos = start * BLOCK + jnp.arange(kv_block)
@@ -418,6 +448,7 @@ def attend_compressed(
     acc = acc * alpha[..., None] + jnp.einsum("bhk,bhkd->bhd", pt, tvr)
 
     out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, H, hd)
+    out = shard_hint(out, "batch", "model", None)
     return out[:, None].astype(q.dtype)           # (B, 1, H, hd)
 
 

@@ -11,6 +11,7 @@ import numpy as np
 from repro.codec import dispatch as codec_dispatch
 from repro.core.kv_cache import as_pos_vec
 from repro.kernels.fused_attend.kernel import attend_compressed_plane
+from repro.parallel.sharding import attn_hint
 
 BLOCK = 8
 
@@ -69,4 +70,6 @@ def attend_with_tail(
     l2 = l * alpha + jnp.sum(pt, axis=-1, keepdims=True)
     acc2 = acc * alpha + jnp.einsum("bgrt,bgtd->bgrd", pt, tv)
     out = acc2 / jnp.maximum(l2, 1e-30)
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+    # under a serve mesh keep the merged output head-sharded like the packed
+    # planes it came from (slots on data, heads on model when divisible)
+    return attn_hint(out.reshape(b, 1, h, hd).astype(q.dtype))

@@ -1,14 +1,11 @@
-"""Production mesh factory (assignment §MULTI-POD DRY-RUN).
+"""Production mesh factory — re-export (assignment §MULTI-POD DRY-RUN).
 
-A FUNCTION, not a module-level constant: importing this module must never
-touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+The one mesh factory lives in `repro.parallel.mesh`; this module used to
+carry a verbatim copy and now just re-exports it for the dry-run / HLO
+tooling import path.  Still a FUNCTION, not a module-level constant:
+importing this module must never touch jax device state (the dry-run sets
+XLA_FLAGS before first jax init), which the re-export preserves.
 """
 from __future__ import annotations
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+from repro.parallel.mesh import make_production_mesh  # noqa: F401

@@ -1,15 +1,23 @@
 """Serving driver: continuous-batching generation with raw or DCT-compressed
-KV cache.
+KV cache, optionally sharded over a (data x model) device mesh.
 
     python -m repro.launch.serve --arch yi_6b --reduced --requests 8 \
         --kv-compress --kv-keep 6
 
+    # 4-way slot-pool sharding (needs 4 devices, e.g. under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4):
+    python -m repro.launch.serve --arch yi_6b --reduced --kv-compress \
+        --mesh 4x1
+
 The engine is a slot scheduler: requests with different prompt lengths and
 budgets stream through a fixed pool of batch slots, each slot at its own
 position over the compressed store. `--scheduler static` restores the
-lock-step wave baseline. Reports tokens/s, slot utilization, and the
-analytic KV-cache HBM footprint both ways — the serving analogue of the
-paper's Table II bandwidth saving.
+lock-step wave baseline. `--mesh DATAxMODEL` places batch slots (and every
+compressed-pool plane) on `data` and attention heads on `model`; params are
+device_put with the train-path `param_specs` BEFORE the engine builds, so
+multi-device serving never silently replicates weights. Reports tokens/s,
+slot utilization, and the analytic KV-cache HBM footprint both ways — the
+serving analogue of the paper's Table II bandwidth saving.
 """
 from __future__ import annotations
 
@@ -22,6 +30,8 @@ import numpy as np
 from repro.codec import plan as plan_lib
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models import api as model_api
+from repro.parallel import mesh as mesh_lib
+from repro.parallel import sharding as sh
 from repro.serve import engine as E
 
 
@@ -51,6 +61,10 @@ def main(argv=None):
                     help="solve the plan from a KV byte budget instead "
                          "(CompressionPlan.from_budget; overrides --kv-plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serve mesh, e.g. 4x1 or 2x2 (batch "
+                         "slots shard on data, attention heads on model); "
+                         "default: single-device")
     ap.add_argument("--scheduler", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--vary-lengths", action="store_true",
@@ -66,6 +80,15 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} has no decode path (encoder-decoder cap)")
 
     params = api.init(jax.random.PRNGKey(0))
+    mesh = mesh_lib.make_serve_mesh(args.mesh)
+    if mesh is not None:
+        # place loaded params per the param rules BEFORE the engine builds:
+        # `init` leaves them wherever device 0 is, and feeding that into a
+        # multi-device jit would silently replicate (or re-transfer) every
+        # call. Serving never FSDP-shards weights (fsdp=False): TP on
+        # `model`, replicated across `data`.
+        params = jax.device_put(
+            params, sh.param_shardings(params, mesh, fsdp=False))
     if args.kv_budget_mb is not None:
         plan = plan_lib.CompressionPlan.from_budget(
             cfg, args.max_seq, args.kv_budget_mb * 1e6, batch=args.batch)
@@ -74,7 +97,7 @@ def main(argv=None):
     sc = E.ServeConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         kv_compress=args.kv_compress, plan=plan,
-        temperature=args.temperature,
+        temperature=args.temperature, mesh=mesh,
     )
     eng = E.Engine(api, params, sc, batch=args.batch, scheduler=args.scheduler)
 
@@ -97,7 +120,8 @@ def main(argv=None):
     dec_tok = st["tokens_out"] - st["requests"]
     dec_tps = dec_tok / st["decode_s"] if st["steps"] else 0.0
     print(f"arch={cfg.name} kv_compress={args.kv_compress} "
-          f"plan={plan.to_spec()} scheduler={eng.scheduler}")
+          f"plan={plan.to_spec()} scheduler={eng.scheduler} "
+          f"mesh={mesh_lib.mesh_desc(mesh)}")
     print(f"requests={st['requests']} decode_steps={st['steps']} "
           f"tokens_out={st['tokens_out']} decode_tok/s={dec_tps:.1f} "
           f"slot_util={eng.slot_utilization():.2f} prefill_s={st['prefill_s']:.2f}")
@@ -107,6 +131,11 @@ def main(argv=None):
           f"({raw_b / cmp_b:.1f}x) -> at {args.max_seq} ctx x batch "
           f"{args.batch}: {raw_b*args.max_seq*args.batch/1e6:.1f} MB vs "
           f"{cmp_b*args.max_seq*args.batch/1e6:.1f} MB")
+    if mesh is not None:
+        ps = eng.kv_pool_stats()
+        print(f"KV pool per device: {ps['kv_bytes_per_device']/1e6:.2f} MB "
+              f"of {ps['kv_pool_bytes']/1e6:.2f} MB total "
+              f"across {mesh.devices.size} devices")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:12]}{'...' if len(r.out_tokens) > 12 else ''}")
     return done

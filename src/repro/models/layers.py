@@ -213,6 +213,11 @@ def decode_attention(
     _, s, hkv, hd_v = v.shape
     n_rep = h // hkv
     scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    # cache layout under a serve mesh: slots on data, kv heads on model when
+    # divisible (else S on model) — same rule as sharding.kv_cache_spec, so
+    # the scatter-updated cache flows in without a reshard
+    k = attn_hint(k)
+    v = attn_hint(v)
     # bf16-native contractions with f32 accumulation (MXU semantics): casting
     # the cache to f32 would make XLA materialize a full f32 copy of the
     # stacked cache per layer (measured 87 GB/step of pure convert churn on
@@ -375,6 +380,12 @@ def mla_decode_attention(p, x, positions, cfg, c_kv, k_rope, pos):
     else:
         q = dense(p["wq"], x)
     q = q.reshape(b, s, h, nope + rope)
+    q = attn_hint(q)
+    # latent cache layout (sharding.latent_cache_spec): slots on data, S on
+    # model — the rank-r contractions below then reduce over the model axis
+    # with tiny (B, H) partials instead of gathering the latent store
+    c_kv = shard_hint(c_kv, "batch", "model", None)
+    k_rope = shard_hint(k_rope, "batch", "model", None)
     q_nope, q_rope = jnp.split(q, [nope], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 

@@ -28,7 +28,7 @@ from repro.codec import plan as plan_lib
 from repro.core import kv_cache as kvc
 from repro.core.activation import compressed_checkpoint
 from repro.models import layers as L
-from repro.parallel.sharding import logical as shard_hint
+from repro.parallel.sharding import attn_hint, logical as shard_hint
 
 Params = dict[str, Any]
 
@@ -345,8 +345,10 @@ def decode_step(
             k = scatter_cache_token(cache_slice["k"], k_new, pos)
             v = scatter_cache_token(cache_slice["v"], v_new, pos)
             q = L.dense(p["attn"]["wq"], hn).reshape(b, 1, cfg.n_heads, hd)
+            q = attn_hint(q)  # heads on `model`: matches the cache spec layout
             q = L.apply_rope(q, positions, cfg.rope_theta)
             out_h = L.decode_attention(q, k, v, pos)  # single-shot (no chunk scan)
+            out_h = attn_hint(out_h)
             attn_out = L.dense(p["attn"]["wo"], out_h.reshape(b, 1, cfg.n_heads * hd))
             new_cache = {"k": k, "v": v}
         h = h + attn_out

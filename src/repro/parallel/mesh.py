@@ -37,6 +37,30 @@ def use_mesh(mesh: Mesh):
     return mesh
 
 
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """`jax.shard_map` compat shim (same pattern as `use_mesh`).
+
+    Newer jax exposes shard_map at the top level with `axis_names=` (manual
+    axes) and `check_vma=`; the pinned 0.4.x only has
+    `jax.experimental.shard_map.shard_map` with the inverse `auto=` (axes
+    left to GSPMD) and `check_rep=`. Every caller (GradCompress pod
+    exchange, its tests) goes through here so both jax lines compile.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names) \
+        if axis_names is not None else frozenset()
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -50,8 +74,42 @@ def make_host_mesh(model: int = 1) -> Mesh:
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """'4x1' -> (data=4, model=1). The serve-mesh CLI grammar."""
+    m = spec.lower().split("x")
+    if len(m) != 2:
+        raise ValueError(f"mesh spec must be DATAxMODEL (e.g. 4x1), got {spec!r}")
+    data, model = int(m[0]), int(m[1])
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return data, model
+
+
+def make_serve_mesh(spec: str | None) -> Mesh | None:
+    """Host mesh for serving from a 'DATAxMODEL' spec; None/'' => no mesh.
+
+    Uses the first data*model local devices, so a '2x2' engine can run on a
+    4-device host next to a '4x1' one in the same process (tests do exactly
+    that under --xla_force_host_platform_device_count).
+    """
+    if not spec:
+        return None
+    data, model = parse_mesh_spec(spec)
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"mesh {spec} needs {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def mesh_desc(mesh: Mesh | None) -> str:
+    """'4x1'-style axis-size summary for logs/artifacts; 'none' without one."""
+    if mesh is None:
+        return "none"
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
 
 
 def batch_spec(mesh: Mesh) -> P:

@@ -50,6 +50,10 @@ def _path_keys(path) -> list[str]:
     for p in path:
         if isinstance(p, DictKey):
             keys.append(str(p.key))
+        elif hasattr(p, "name"):      # GetAttrKey (KVSegment fields)
+            keys.append(str(p.name))
+        elif hasattr(p, "idx"):       # SequenceKey (cache.segments index)
+            keys.append(str(p.idx))
         else:
             keys.append(str(p))
     return keys
@@ -217,6 +221,34 @@ def latent_cache_spec(mesh_axes: tuple[str, ...], *, stacked: bool = True) -> P:
     return P(*entries)
 
 
+def ambient_mesh():
+    """The mesh whose axes sharding hints may name, or None.
+
+    Newer jax exposes it via `jax.sharding.get_abstract_mesh()` (set by
+    `jax.set_mesh`); the pinned 0.4.x has neither, but the legacy
+    `with mesh:` context installs a global physical mesh readable through
+    `pxla.thread_resources`.  Without this fallback every hint in the model
+    and cache code silently no-ops on 0.4.x — decode sharding would then
+    rest entirely on GSPMD propagation from the jit boundary."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and mesh.axis_names:
+            return mesh
+    except AttributeError:
+        pass
+    except Exception:
+        return None
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
 def attn_hint(x: jax.Array, *, s_axis: int = 1, h_axis: int = 2) -> jax.Array:
     """(B, S, H, hd) attention-tensor constraint: heads on `model` when
     divisible (Megatron TP), else SEQUENCE on `model` (context parallelism —
@@ -224,7 +256,7 @@ def attn_hint(x: jax.Array, *, s_axis: int = 1, h_axis: int = 2) -> jax.Array:
     all-gathered per block, which is cheap next to score-sized partial-sum
     all-reduces GSPMD otherwise invents)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = ambient_mesh()
         if mesh is None or "model" not in mesh.axis_names:
             return x
         msize = mesh.shape["model"]
@@ -240,7 +272,15 @@ def attn_hint(x: jax.Array, *, s_axis: int = 1, h_axis: int = 2) -> jax.Array:
 
 def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
     """PartitionSpec pytree for a decode cache (raw, latent, recurrent, or
-    DCT-compressed). Dispatch on leaf key + rank."""
+    DCT-compressed). Dispatch on leaf key + rank.
+
+    Accepts plain dicts of planes AND the serve engine's `CompressedKVCache`
+    (a tuple of `KVSegment`s — registered with key paths, so each segment's
+    packed/scale/tail planes dispatch by name exactly like the dict form).
+    Batch slots land on the data axes, kv heads on `model` when divisible —
+    the mesh-wide analogue of the paper's banked feature-map buffer: every
+    bank (device) owns a fixed slice of the slot pool and of the head planes,
+    and decode-step traffic for a slot never leaves its bank."""
     axes = tuple(mesh.axis_names)
     dp = tuple(a for a in BATCH_AXES if a in axes) or None
     has_model = "model" in axes
@@ -266,7 +306,8 @@ def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
             return P(None, dp, None if h else ("model" if has_model else None),
                      h, None)
         if name in ("tail_k", "tail_v"):            # (L, B, 8, Hkv, hd)
-            return P(None, dp, None, None, None)
+            h = "model" if head_axis_ok(cfg.n_kv_heads) else None
+            return P(None, dp, None, h, None)
         if name == "ssm":                           # (G, A, B, H, P, N)
             nh = leaf.shape[3]
             h = "model" if (has_model and nh % msize == 0 and nh >= msize) else None
@@ -287,11 +328,54 @@ def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
     )
 
 
+def cache_shardings(cache_shapes: Any, cfg, mesh: Mesh):
+    """NamedSharding pytree matching `cache_shapes` (see cache_specs)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cache_specs(cache_shapes, cfg, mesh)
+    )
+
+
+def kv_pool_specs(cfg, plan, mesh: Mesh, *, batch: int, max_seq: int,
+                  dtype=None):
+    """Cache specs for the compressed KV slot pool straight from the plan.
+
+    Builds the `CompressedKVCache` shape tree (one `KVSegment` per contiguous
+    equal-policy layer run) without allocating, then applies the cache rules:
+    int8 DCT blocks, scales and raw tails sharded on the data axes (batch
+    slots) with kv heads on `model` — the same placement `param_specs` gives
+    the attention weights, so decode never reshards between them.
+    """
+    from repro.core import kv_cache as kvc  # lazy: core imports stay one-way
+
+    kw = {} if dtype is None else {"dtype": dtype}
+    shapes = jax.eval_shape(
+        lambda: kvc.init_compressed_cache(cfg, batch, max_seq, plan=plan, **kw)
+    )
+    return cache_specs(shapes, cfg, mesh)
+
+
+def per_device_bytes(shapes: Any, specs: Any, mesh: Mesh) -> float:
+    """Bytes each device holds of a pytree sharded per `specs` on `mesh`."""
+    leaves = jax.tree.leaves(shapes)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    total = 0.0
+    for leaf, spec in zip(leaves, spec_leaves):
+        factor = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for name in (entry if isinstance(entry, tuple) else (entry,)):
+                factor *= mesh.shape[name]
+        itemsize = np.dtype(leaf.dtype).itemsize
+        total += int(np.prod(leaf.shape)) * itemsize / factor
+    return total
+
+
 def constrain(x: jax.Array, spec: P) -> jax.Array:
     """with_sharding_constraint that no-ops when no mesh context is set
     (keeps single-device unit tests independent of distribution)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = ambient_mesh()
         if mesh is None or not mesh.axis_names:
             return x
         return jax.lax.with_sharding_constraint(x, spec)
@@ -311,7 +395,7 @@ def logical(x: jax.Array, *entries) -> jax.Array:
     changes WHERE these are placed, not the models themselves.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = ambient_mesh()
         if mesh is None or not mesh.axis_names:
             return x
         names = set(mesh.axis_names)

@@ -21,6 +21,16 @@ allocated feature-map buffer: slots are occupied exactly as long as their
 request lives, instead of the whole batch being provisioned for the slowest
 request.
 
+Mesh-native serving: `ServeConfig.mesh` places the whole serve loop on a
+(data x model) device mesh — batch slots (and every `KVSegment` plane of the
+compressed pool) shard on `data`, attention heads on `model`, mirroring the
+train-path param rules.  `serve_shardings` builds the explicit NamedShardings
+and the Engine jits prefill / decode / cache-init / slot write / slot reset
+with them, so the decode hot loop is compiled shard-local: each device owns
+its slice of the slot pool the way the paper's banks own feature-map buffer
+regions, and no step gathers the cache.  mesh=None degenerates to the
+single-device behavior, bitwise.
+
 MLA (deepseek-v2) keeps its raw latent cache: the latent IS a learned
 compression (kv_lora 512 vs 2*128*128 per token = 64x); stacking a fixed DCT
 basis on top of it measurably hurts (DESIGN.md §4) — `compressed=True` falls
@@ -28,6 +38,7 @@ back to raw for MLA and logs the fact.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -35,12 +46,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.codec import plan as plan_lib
 from repro.core import kv_cache as kvc
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.api import ModelAPI
+from repro.parallel import mesh as mesh_lib
+from repro.parallel import sharding as sh
 
 Params = dict[str, Any]
 
@@ -101,11 +115,13 @@ def decode_step_compressed(
             hn = norm(p["ln1"], h)
             b, s, _ = hn.shape
             q = L.dense(p["attn"]["wq"], hn).reshape(b, s, cfg.n_heads, hd)
+            q = sh.attn_hint(q)  # heads on `model` (matches the cache specs)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
             lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend)
             attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
                                    backend=backend)
+            attn = sh.attn_hint(attn)
             h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
             if "moe" in p:
                 h = h + L.moe_ffn(p["moe"], norm(p["ln2"], h), cfg, dropless=True)
@@ -205,6 +221,8 @@ class ServeConfig:
     eos_id: int = -1             # -1 => never stops early
     kv_block: int = 1024
     codec_backend: str | None = None  # None = auto (repro.codec.dispatch)
+    mesh: Any = None             # jax.sharding.Mesh: shard the serve loop on
+                                 # (data, model); None = single-device path
 
     def resolved_plan(self) -> plan_lib.CompressionPlan:
         """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
@@ -276,6 +294,43 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
 
 
 # ---------------------------------------------------------------------------
+# Mesh placement: explicit NamedShardings for every serve step
+# ---------------------------------------------------------------------------
+
+def serve_shardings(api: ModelAPI, params: Params, sc: ServeConfig,
+                    batch: int, cache_init) -> dict[str, Any]:
+    """Explicit NamedShardings for the serve step functions on `sc.mesh`.
+
+    Placement mirrors the train-path rules: params via `param_specs` with
+    fsdp=False (TP on `model`, replicated across `data` — serving reads
+    weights every step, FSDP re-gathers would dominate decode), the KV pool
+    via `cache_specs` (batch slots on `data`, kv heads on `model`, every
+    `KVSegment` leaf included), and (B,) token/position vectors on `data`.
+    Single-request admission tensors (batch 1) replicate — `fit_spec` drops
+    non-dividing axes — and splice into the sharded pool through the
+    slot-write scatter, so admitting one request never reshards the pool.
+    """
+    mesh = sc.mesh
+    cfg = api.cfg
+    axes = tuple(mesh.axis_names)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pool_shapes = jax.eval_shape(lambda: cache_init(batch))
+    slot_shapes = jax.eval_shape(lambda: cache_init(1))
+    return {
+        "params": sh.param_shardings(params, mesh, fsdp=False),
+        "rep": ns(P()),
+        # (B,) per-slot token/position vectors ride the slot-pool data axes
+        "vec": ns(sh.data_batch_spec(axes, 1, dim0=batch, mesh=mesh)),
+        "pool": sh.cache_shardings(pool_shapes, cfg, mesh),
+        "slot": sh.cache_shardings(slot_shapes, cfg, mesh),
+        "tokens": ns(sh.data_batch_spec(axes, 2, dim0=batch, mesh=mesh)),
+        "logits_decode": ns(sh.data_batch_spec(axes, 2, dim0=batch, mesh=mesh)),
+        "logits_prefill": ns(sh.data_batch_spec(axes, 3, dim0=batch, mesh=mesh)),
+        "logits_admit": ns(sh.data_batch_spec(axes, 3, dim0=1, mesh=mesh)),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Slot lifecycle helpers (jit-able; work on any cache pytree, batch axis 1)
 # ---------------------------------------------------------------------------
 
@@ -331,18 +386,60 @@ class Engine:
                  seed: int = 0, scheduler: str = "continuous"):
         assert scheduler in ("continuous", "static"), scheduler
         self.api = api
-        self.params = params
         self.sc = sc
         self.batch = batch
         self.rng = jax.random.PRNGKey(seed)
         prefill_fn, decode_fn, cache_init, vec_pos = make_steps(api, sc)
-        self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
-        self._cache_init = cache_init
-        self._write = jax.jit(cache_write_slot)
-        self._reset = jax.jit(cache_reset_slot)
         self.vec_pos = vec_pos
         self.scheduler = scheduler if vec_pos else "static"
+        self._cache_init_raw = cache_init  # un-jitted: pool accounting
+        if sc.mesh is None:
+            self._prefill = jax.jit(prefill_fn)
+            self._decode = jax.jit(decode_fn)
+            self._cache_init = cache_init
+            self._write = jax.jit(cache_write_slot)
+            self._reset = jax.jit(cache_reset_slot)
+        else:
+            shd = serve_shardings(api, params, sc, batch, cache_init)
+            # place params once; the jits below pin the same shardings, so no
+            # per-call retransfer (and a launcher device_put is a no-op)
+            params = jax.device_put(params, shd["params"])
+            # static waves drive decode with one scalar position; continuous
+            # threads the per-slot (B,) vector on the data axes
+            pos_sh = shd["vec"] if self.scheduler == "continuous" else shd["rep"]
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(shd["params"], shd["vec"], shd["pool"], pos_sh),
+                out_shardings=(shd["logits_decode"], shd["pool"]),
+            )
+            if self.scheduler == "continuous":
+                # admission: one request (batch 1, replicated) -> slot cache
+                self._prefill = jax.jit(
+                    prefill_fn,
+                    in_shardings=(shd["params"], shd["rep"], shd["rep"]),
+                    out_shardings=(shd["logits_admit"], shd["slot"]),
+                )
+            else:
+                # lock-step wave: the full (B, S) prompt block is data-sharded
+                self._prefill = jax.jit(
+                    prefill_fn,
+                    in_shardings=(shd["params"], shd["tokens"]),
+                    out_shardings=(shd["logits_prefill"], shd["pool"]),
+                )
+            pool_init = jax.jit(lambda: cache_init(batch),
+                                out_shardings=shd["pool"])
+            self._cache_init = lambda b: pool_init()
+            self._write = jax.jit(
+                cache_write_slot,
+                in_shardings=(shd["pool"], shd["slot"], shd["rep"]),
+                out_shardings=shd["pool"],
+            )
+            self._reset = jax.jit(
+                cache_reset_slot,
+                in_shardings=(shd["pool"], shd["rep"]),
+                out_shardings=shd["pool"],
+            )
+        self.params = params
         self.stats = {"requests": 0, "tokens_out": 0, "steps": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
                       "slot_steps_live": 0, "slot_steps_total": 0}
@@ -358,6 +455,19 @@ class Engine:
         """Fraction of decode slot-steps spent on live requests."""
         return self.stats["slot_steps_live"] / max(self.stats["slot_steps_total"], 1)
 
+    def kv_pool_stats(self) -> dict:
+        """Analytic footprint of this engine's KV pool: total bytes and the
+        per-device slice under `sc.mesh` (the banked-buffer accounting —
+        what one device/bank actually holds). No allocation: eval_shape."""
+        shapes = jax.eval_shape(lambda: self._cache_init_raw(self.batch))
+        total = sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                    for l in jax.tree.leaves(shapes))
+        mesh = self.sc.mesh
+        per_device = float(total) if mesh is None else sh.per_device_bytes(
+            shapes, sh.cache_specs(shapes, self.api.cfg, mesh), mesh)
+        return {"kv_pool_bytes": int(total),
+                "kv_bytes_per_device": per_device}
+
     # ------------------------------------------------------------------ API
     def generate(self, requests: list[Request]) -> list[Request]:
         """Serve every request to completion; returns them in input order.
@@ -366,11 +476,17 @@ class Engine:
         out_tokens/done fields fill in as slots retire).
         """
         queue = list(requests)
-        if self.scheduler == "static":
-            for w0 in range(0, len(queue), self.batch):
-                self._run_wave(queue[w0:w0 + self.batch])
-        else:
-            self._run_continuous(queue)
+        # the ambient mesh context activates the model-internal shard hints
+        # (sharding.logical / attn_hint) while the jits' explicit in/out
+        # NamedShardings pin the step boundaries
+        ctx = mesh_lib.use_mesh(self.sc.mesh) if self.sc.mesh is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            if self.scheduler == "static":
+                for w0 in range(0, len(queue), self.batch):
+                    self._run_wave(queue[w0:w0 + self.batch])
+            else:
+                self._run_continuous(queue)
         self.stats["requests"] += len(queue)
         return queue
 

@@ -166,7 +166,7 @@ def make_train_step(api: ModelAPI, mesh: Mesh, tc: TrainConfig):
             loss = jax.lax.pmean(loss, "pod")
             return grads, new_residual, loss
 
-        pod_grads = jax.shard_map(
+        pod_grads = mesh_lib.shard_map(
             per_pod,
             mesh=mesh,
             in_specs=(P(), P(), P("pod")),

@@ -69,6 +69,61 @@ def test_cache_specs_dispatch(mesh):
     assert len(specs["k"]) == 5
 
 
+def test_cache_specs_dispatch_on_kv_segments(mesh):
+    """The KVSegment pytree registers key paths, so the same name-dispatch
+    rules cover the serve engine's CompressedKVCache directly — including
+    per-policy (pyramid) plans with one spec set per segment."""
+    from repro.configs.base import get_config
+    from repro.core import kv_cache as KV
+
+    cfg = get_config("yi_6b").reduced()
+    shapes = jax.eval_shape(
+        lambda: KV.init_compressed_cache(cfg, 4, 64, plan="0-1:keep=8,2-:keep=4"))
+    specs = sh.cache_specs(shapes, cfg, mesh)
+    assert len(specs.segments) == 2
+    for seg_shapes, seg_spec in zip(shapes.segments, specs.segments):
+        assert len(seg_spec.packed_k) == seg_shapes.packed_k.ndim == 7
+        assert len(seg_spec.tail_k) == seg_shapes.tail_k.ndim == 5
+    # kv_pool_specs builds the identical tree from (cfg, plan, mesh) alone
+    pool = sh.kv_pool_specs(cfg, "0-1:keep=8,2-:keep=4", mesh, batch=4,
+                            max_seq=64)
+    assert specs == pool
+
+
+def test_per_device_bytes_counts_shard_factors(mesh):
+    shapes = {"a": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.int8)}
+    specs = {"a": P(("data",), "model"), "b": P(None)}
+    # 1x1 module mesh: factors are 1 -> exact byte total
+    assert sh.per_device_bytes(shapes, specs, mesh) == 8 * 16 * 4 + 4
+
+
+def test_make_serve_mesh_spec_parsing():
+    from repro.parallel import mesh as mesh_lib
+
+    assert mesh_lib.parse_mesh_spec("4x1") == (4, 1)
+    assert mesh_lib.parse_mesh_spec("2X2") == (2, 2)
+    assert mesh_lib.make_serve_mesh(None) is None
+    assert mesh_lib.make_serve_mesh("") is None
+    with pytest.raises(ValueError):
+        mesh_lib.parse_mesh_spec("4")
+    with pytest.raises(ValueError):
+        mesh_lib.parse_mesh_spec("0x2")
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        mesh_lib.make_serve_mesh(f"{n + 1}x1")
+    m = mesh_lib.make_serve_mesh(f"{n}x1")
+    assert tuple(m.axis_names) == ("data", "model")
+    assert m.shape["data"] == n
+
+
+def test_launch_mesh_is_a_reexport():
+    from repro.launch import mesh as launch_mesh
+    from repro.parallel import mesh as parallel_mesh
+
+    assert launch_mesh.make_production_mesh is parallel_mesh.make_production_mesh
+
+
 def test_hlo_type_bytes():
     assert H._type_bytes("f32[4,8]") == 128
     assert H._type_bytes("bf16[10]{0}") == 20
