@@ -39,7 +39,8 @@ def run_case(act: np.ndarray, level: int = 1) -> dict:
     dense_b = encode.dense_bits(act, 16)
     policy = codec.CompressionPolicy(level=level)
     comp = codec.paper_compress(jnp.asarray(act), policy)
-    paper_b = float(encode.paper_codec_bits(np.asarray(comp.values * comp.index), 8))
+    paper_b = float(encode.paper_codec_bits(
+        np.asarray(codec.paper_masked_values(comp)), 8))
     # reconstruction error of the lossy paper codec
     rec = codec.paper_decompress(comp)
     rel_err = float(jnp.linalg.norm(rec - act) / (jnp.linalg.norm(act) + 1e-9))

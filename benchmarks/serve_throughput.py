@@ -1,5 +1,6 @@
-"""Serving throughput: static lock-step vs continuous batching over the
-compressed KV pool (qwen2_0_5b-shaped configs, CPU interpret mode).
+"""Serving throughput: static lock-step vs continuous batching vs the PAGED
+pool over the compressed KV store (qwen2_0_5b-shaped configs, CPU interpret
+mode).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke] \
         [--mesh 4x1]
@@ -11,7 +12,13 @@ positions each pool slot is occupied exactly as long as its request lives
 mixed workload finishes in fewer decode steps at higher slot utilization
 than the wave-at-a-time baseline.
 
-`--mesh DATAxMODEL` runs both schedulers on a host device mesh (slots on
+The paged rows push the same idea into the STORE: at a page budget of 50%
+of the dense pool's packed bytes, the paged engine runs 2x the concurrent
+slots (asserted >= 1.5x live at once on a uniform probe workload) with
+greedy outputs bitwise identical to the dense engine on the mixed workload
+— paying only for blocks requests actually fill, not slots x max_seq.
+
+`--mesh DATAxMODEL` runs the schedulers on a host device mesh (slots on
 data, heads on model) and records the mesh axis sizes plus the per-device
 slice of the KV pool in the artifact — needs that many local devices (CI
 forces 4 with XLA_FLAGS=--xla_force_host_platform_device_count=4).
@@ -47,28 +54,40 @@ def build_workload(cfg, n_requests: int, prompt_hi: int, new_hi: int, seed=0):
     return reqs
 
 
-def run_one(api, params, sc, batch, scheduler, workload_args):
+def run_one(api, params, sc, batch, scheduler, workload_args, reqs=None,
+            label=None):
     eng = E.Engine(api, params, sc, batch=batch, scheduler=scheduler)
-    reqs = build_workload(api.cfg, *workload_args)
+    reqs = build_workload(api.cfg, *workload_args) if reqs is None else reqs
     t0 = time.perf_counter()
     done = eng.generate(reqs)
     wall = time.perf_counter() - t0
     st = eng.stats
     # first token per request comes from prefill logits, not the decode loop
     dec_tok = st["tokens_out"] - st["requests"]
-    return eng, {
-        "scheduler": eng.scheduler,
+    pool = eng.kv_pool_stats()
+    row = {
+        "scheduler": label or eng.scheduler,
+        "batch": batch,
         "requests": st["requests"],
         "tokens_out": st["tokens_out"],
         "decode_steps": st["steps"],
         "slot_utilization": round(eng.slot_utilization(), 4),
+        "peak_live_slots": st["peak_live_slots"],
         "decode_s": round(st["decode_s"], 4),
         "prefill_s": round(st["prefill_s"], 4),
         "wall_s": round(wall, 4),
         "decode_tok_per_s": round(dec_tok / st["decode_s"], 2) if st["steps"] else 0.0,
         "tok_per_s": round(st["tokens_out"] / max(wall, 1e-9), 2),
         "mean_out_len": round(float(np.mean([len(r.out_tokens) for r in done])), 2),
+        "kv_pool_bytes": pool["kv_pool_bytes"],
+        "slots_per_gb": round(pool["slots_per_gb"], 1),
     }
+    if eng.paged:
+        row.update(pool_pages=pool["pool_pages"],
+                   page_bytes=pool["page_bytes"],
+                   peak_pages_in_use=pool["peak_pages_in_use"],
+                   admit_blocked_on_pages=st["admit_blocked_on_pages"])
+    return eng, done, row
 
 
 def main(argv=None):
@@ -89,8 +108,10 @@ def main(argv=None):
 
     if args.smoke:
         n_req, prompt_hi, new_hi, max_seq = 5, 12, 6, 48
+        probe_plen, probe_new = 8, 8
     else:
         n_req, prompt_hi, new_hi, max_seq = args.requests, 24, 16, 96
+        probe_plen, probe_new = 16, 16
 
     sc = E.ServeConfig(max_seq=max_seq, kv_compress=True, kv_keep=args.kv_keep,
                        codec_backend="reference", mesh=mesh)
@@ -98,9 +119,29 @@ def main(argv=None):
 
     engines_rows = [run_one(api, params, sc, args.batch, sched, workload)
                     for sched in ("static", "continuous")]
-    rows = [row for _, row in engines_rows]
 
-    stat, cont = rows
+    # ---- paged pool: 50% page budget, 2x the slots --------------------
+    # dense packed capacity is batch * max_seq/8 block groups; give the
+    # paged pool HALF that in pages and TWICE the slots. Parity leg: the
+    # mixed workload must come out token-for-token identical to the dense
+    # engine. Probe leg: a uniform workload of 2*batch requests must be
+    # live on >= 1.5x the dense engine's slots at once.
+    pool_pages = (args.batch * max_seq // 8) // 2
+    sc_paged = E.ServeConfig(max_seq=max_seq, kv_compress=True,
+                             kv_keep=args.kv_keep, codec_backend="reference",
+                             mesh=mesh, pool_pages=pool_pages)
+    engines_rows.append(run_one(api, params, sc_paged, 2 * args.batch,
+                                "continuous", workload, label="paged"))
+    probe = [E.Request(uid=i,
+                       prompt=np.arange(probe_plen, dtype=np.int32) + i,
+                       max_new=probe_new) for i in range(2 * args.batch)]
+    engines_rows.append(run_one(api, params, sc_paged, 2 * args.batch,
+                                "continuous", workload, reqs=probe,
+                                label="paged_probe"))
+
+    rows = [row for _, _, row in engines_rows]
+    stat, cont, paged, paged_probe = rows
+
     # mesh provenance + the per-device slice of the sharded KV pool (the
     # banked-buffer accounting: what one "bank" actually holds)
     pool = engines_rows[0][0].kv_pool_stats()
@@ -117,6 +158,9 @@ def main(argv=None):
         "kv_bytes_per_device": round(pool["kv_bytes_per_device"], 1),
         "step_reduction": round(
             1.0 - cont["decode_steps"] / max(stat["decode_steps"], 1), 4),
+        "paged_pool_pages": pool_pages,
+        "paged_slot_gain": round(paged_probe["peak_live_slots"] /
+                                 max(cont["peak_live_slots"], 1), 2),
         "rows": rows,
     }
     ART.mkdir(exist_ok=True)
@@ -128,14 +172,29 @@ def main(argv=None):
           f"(compressed pool, {pool['kv_bytes_per_device']/1e3:.1f} kB KV "
           f"per device)")
     for r in rows:
-        print(f"  {r['scheduler']:<11} steps={r['decode_steps']:<4} "
+        print(f"  {r['scheduler']:<11} batch={r['batch']} "
+              f"steps={r['decode_steps']:<4} "
               f"slot_util={r['slot_utilization']:.2f} "
+              f"peak_live={r['peak_live_slots']} "
               f"decode_tok/s={r['decode_tok_per_s']:.1f} wall={r['wall_s']:.1f}s")
     print(f"decode-step reduction continuous vs static: "
-          f"{summary['step_reduction'] * 100:.0f}%  -> {out}")
+          f"{summary['step_reduction'] * 100:.0f}%")
+    print(f"paged: {pool_pages} pages (50% budget) on {2 * args.batch} slots "
+          f"-> peak {paged_probe['peak_live_slots']} live "
+          f"({summary['paged_slot_gain']:.2f}x dense), "
+          f"{paged['slots_per_gb']:.0f} vs {cont['slots_per_gb']:.0f} slots/GB "
+          f"-> {out}")
     # sanity for CI: both schedulers must have served every token requested
     assert stat["requests"] == cont["requests"] == n_req
     assert cont["tokens_out"] == stat["tokens_out"]
+    # paged acceptance: bitwise greedy parity with the dense pool on the
+    # mixed workload, and >= 1.5x concurrent slots at the 50% page budget
+    dense_done = engines_rows[1][1]
+    paged_done = engines_rows[2][1]
+    for a, b in zip(dense_done, paged_done):
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert paged_probe["peak_live_slots"] >= 1.5 * cont["peak_live_slots"], \
+        (paged_probe["peak_live_slots"], cont["peak_live_slots"])
     return summary
 
 

@@ -24,6 +24,7 @@ from repro.codec.api import (
     idct2,
     paper_compress,
     paper_decompress,
+    paper_masked_values,
     paper_roundtrip,
     paper_storage_bits,
     quant_pack,
@@ -84,6 +85,7 @@ __all__ = [
     "idct2",
     "paper_compress",
     "paper_decompress",
+    "paper_masked_values",
     "paper_roundtrip",
     "paper_storage_bits",
     "plan",

@@ -42,6 +42,20 @@ from repro.core import quantize as quant_lib
 
 BLOCK = 8
 
+# Per-tile storage header: the f32 scale is the ONLY header the truncated
+# scheme stores (the symmetric quantizer guarantees the `zero` plane is
+# all-zeros layout filler — see TruncatedCompressed).  Every storage report
+# in the repo (TruncatedCompressed.nbytes_per_element, Codec.storage_stats,
+# CompressionPlan.kv_bytes_per_token, KVSegment.nbytes and the serve
+# engine's kv_pool_stats) derives from `tile_bytes` so the accounting can't
+# drift between the codec and the pool again.
+TILE_HEADER_BYTES = 4
+
+
+def tile_bytes(keep: int) -> int:
+    """Compressed bytes of one 8x8 tile: int8 k x k corner + f32 scale."""
+    return keep * keep + TILE_HEADER_BYTES
+
 
 # ---------------------------------------------------------------------------
 # Policies and compressed containers (canonical home; repro.core.compressor
@@ -119,9 +133,7 @@ class TruncatedCompressed:
         zero by the symmetric quantizer (it exists purely for layout
         compatibility), so charging for it would overstate the footprint.
         """
-        k = self.keep
-        per_tile = k * k * 1 + 4  # int8 corner + f32 scale header
-        return per_tile / (BLOCK * BLOCK)
+        return tile_bytes(self.keep) / (BLOCK * BLOCK)
 
 
 # ---------------------------------------------------------------------------
@@ -259,9 +271,8 @@ class Codec:
         Counts the f32 scale as the only per-tile header — the always-zero
         `zero` plane is layout filler, not storage (see TruncatedCompressed).
         """
-        k = c.keep
         ntiles = int(np.prod(c.coefs.shape[:-2]))
-        comp_bits = ntiles * (k * k * 8 + 32)  # int8 corner + f32 scale
+        comp_bits = ntiles * tile_bytes(c.keep) * 8  # int8 corner + f32 scale
         h, w = c.orig_hw
         lead = int(np.prod(c.coefs.shape[:-4])) if c.coefs.ndim > 4 else 1
         orig_bits = lead * h * w * orig_value_bits
@@ -314,11 +325,26 @@ def paper_compress(x: jax.Array, policy: CompressionPolicy,
     )
 
 
+def paper_masked_values(c: Compressed) -> jax.Array:
+    """The carrier gated by the 1-bit index matrix — the only sanctioned way
+    to read a `Compressed`'s coefficients.
+
+    In the paper's hardware only non-zero values are ever written to the
+    feature-map buffer, so the payload under a zero index bit is GARBAGE by
+    contract (encode.py documents the same for our dense carrier).  Every
+    decode and every nnz-based accounting must read through this gate;
+    tests/test_codec.py pins decode invariance to corrupted masked lanes.
+    """
+    return jnp.where(c.index, c.values, 0)
+
+
 def paper_decompress(c: Compressed, dtype=jnp.float32,
                      backend: str | None = None) -> jax.Array:
     """Inverse: decode -> inverse quant x2 -> IDCT -> crop."""
+    # gate by the index matrix BEFORE any arithmetic touches the carrier —
+    # a Compressed rebuilt from the real sparse stream has garbage lanes
     q2 = encode_lib.decode_blocks(
-        encode_lib.EncodedBlocks(values=c.values, index=c.index)
+        encode_lib.EncodedBlocks(values=paper_masked_values(c), index=c.index)
     )
     params = quant_lib.QuantParams(fmin=c.fmin, fmax=c.fmax, bits=c.bits)
     coefs = quant_lib.dequantize_blocks(q2, params, c.level)

@@ -232,15 +232,24 @@ class CompressionPlan:
     # --------------------------------------------------------- budget solver
     def kv_bytes_per_token(self, cfg) -> float:
         """Compressed KV bytes per token, summed over layers (K and V:
-        int8 packed corner + f32 per-tile scale).  The single place the
-        per-block accounting formula lives — launch reporting and the
-        budget solver both derive from it."""
+        int8 packed corner + the f32 per-tile scale header).  Derives from
+        `codec.api.tile_bytes` — the one per-tile definition the codec's
+        storage_stats and the KV pool report also charge."""
+        from repro.codec.api import tile_bytes  # local: plan stays leaf-light
+
         hd = cfg.resolved_head_dim
         assert hd % BLOCK == 0, hd
         nh = hd // BLOCK
         return sum(
-            2 * cfg.n_kv_heads * nh * (pol.kv_keep ** 2 + 4) / BLOCK
+            2 * cfg.n_kv_heads * nh * tile_bytes(pol.kv_keep) / BLOCK
             for pol in self.policies(cfg.n_layers))
+
+    def page_bytes(self, cfg) -> int:
+        """Bytes of one paged-pool page: one 8-token DCT block group across
+        EVERY layer (all layers of a slot flush the same block index, so a
+        page spans them all).  The allocation granule of the paged KV pool
+        and the unit `ServeConfig.page_budget_mb` is solved in."""
+        return int(round(self.kv_bytes_per_token(cfg) * BLOCK))
 
     def kv_cache_bytes(self, cfg, max_seq: int, batch: int = 1,
                        tail_dtype_bytes: int = 2) -> float:

@@ -133,14 +133,20 @@ def sram_bank_occupancy(index: np.ndarray, flip: bool = True) -> tuple[int, int]
     Bank r accumulates the non-zeros of block-row r; with `flip`, every odd
     block is row-reversed before banking (Fig. 5c).  Returns
     (occupied_depth = max bank fill, total_nnz).  Utilization = nnz / (8 * depth).
+
+    Vectorized over the whole block batch (row-sum, flip the odd blocks'
+    row axis, sum over blocks) — the former per-block Python loop crawled
+    on real-size feature maps the same way `rle_codec_bits` used to.
     """
     idx = np.asarray(index, dtype=bool).reshape(-1, BLOCK, BLOCK)
-    fills = np.zeros(BLOCK, dtype=np.int64)
-    for b, blk in enumerate(idx):
-        rows = blk[::-1] if (flip and b % 2 == 1) else blk
-        fills += rows.sum(axis=1)
-    depth = int(fills.max()) if len(idx) else 0
-    return depth, int(idx.sum())
+    nnz = int(idx.sum())
+    if not len(idx):
+        return 0, nnz
+    row_nnz = idx.sum(axis=2, dtype=np.int64)      # (nblocks, 8) per-row fill
+    if flip:
+        row_nnz[1::2] = row_nnz[1::2, ::-1]        # odd blocks bank reversed
+    fills = row_nnz.sum(axis=0)
+    return int(fills.max()), nnz
 
 
 def sram_utilization(index: np.ndarray, flip: bool = True) -> float:

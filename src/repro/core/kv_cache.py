@@ -38,6 +38,19 @@ Attention consumes the packed store via `attend_compressed`, which
 decompresses per KV chunk INSIDE the flash-attention scan — the HBM traffic
 for history is int8 packed + scales only, mirroring the paper's "IDCT fused
 into the PE stream".
+
+PAGED POOL (the paper's dynamic feature-map buffer allocation, literally):
+instead of a dense per-slot `(B, S/8, ...)` store provisioned for max_seq,
+`PagedKVCache` keeps a shared page pool whose page unit is ONE 8-token DCT
+block group across all layers — per segment `packed_* (Lseg, P, Hkv, hd/8,
+k, k)` — addressed through a per-slot block table `(B, S/8) -> page id`.
+Because every layer of a slot flushes the same block index at the same step
+(one position vector drives them all), a single block-table entry covers
+all layers.  Pages are assigned by the HOST (the serve engine owns the free
+list — allocation policy never enters the jit); the device only scatters
+through the page index it is handed (`flush_page`) and gathers history
+through the block table.  Unmapped table entries stay 0 — a valid page —
+and are never read because attention masks `kv_pos < flushed` first.
 """
 from __future__ import annotations
 
@@ -50,12 +63,22 @@ import numpy as np
 
 from repro import codec as codec_lib
 from repro.codec import plan as plan_lib
+from repro.codec.api import tile_bytes
 from repro.parallel.sharding import attn_hint, logical as shard_hint
 
 BLOCK = 8
 
 _SEGMENT_FIELDS = ("packed_k", "scale_k", "packed_v", "scale_v",
                    "tail_k", "tail_v")
+
+
+def block_group_bytes(keep: int, n_kv_heads: int, head_dim: int) -> int:
+    """Bytes of one flushed 8-token block group for ONE layer, K and V
+    (int8 k x k corners + f32 scales) — `codec.api.tile_bytes` applied to
+    the cache geometry.  This is the page-size unit of the paged pool and
+    the per-block term of every analytic pool report."""
+    assert head_dim % BLOCK == 0, head_dim
+    return 2 * n_kv_heads * (head_dim // BLOCK) * tile_bytes(keep)
 
 
 def as_pos_vec(pos: jax.Array | int, batch: int) -> jax.Array:
@@ -148,11 +171,18 @@ class KVSegment:
                          self.keep, self.start, self.stop, self.backend)
 
     def nbytes(self) -> float:
-        """Device bytes actually held by this segment's planes."""
-        packed = self.packed_k.size + self.packed_v.size          # int8
-        scale = 4 * (self.scale_k.size + self.scale_v.size)       # f32
+        """Device bytes held by this segment's planes.
+
+        Computed from `codec.api.tile_bytes` — the same per-tile definition
+        `TruncatedCompressed.nbytes_per_element`, `Codec.storage_stats` and
+        `CompressionPlan.kv_bytes_per_token` charge (int8 corner + the
+        4-byte f32-scale header, nothing else) — so the pool report cannot
+        drift from the codec accounting.  tests/test_plan.py asserts this
+        equals the literal sum of the array buffers.
+        """
+        ntiles = self.scale_k.size + self.scale_v.size  # one scale per tile
         tail = (self.tail_k.size + self.tail_v.size) * self.tail_k.dtype.itemsize
-        return float(packed + scale + tail)
+        return float(ntiles * tile_bytes(self.keep) + tail)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -221,8 +251,8 @@ class CompressedKVCache:
         total = 0.0
         for s in self.segments:
             _, _, _, hkv, nhd, k, _ = s.packed_k.shape
-            per_block = hkv * nhd * (k * k + 4)  # int8 corner + f32 scale
-            total += (s.stop - s.start) * 2 * per_block / BLOCK
+            total += (s.stop - s.start) * \
+                block_group_bytes(k, hkv, nhd * BLOCK) / BLOCK
         return total / self.n_layers
 
     def storage_stats(self, raw_dtype_bytes: int = 2) -> dict:
@@ -263,6 +293,103 @@ def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# Paged pool container (dynamic block-granular allocation)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class PagedKVCache:
+    """Shared page pool + per-slot block tables.
+
+    `segments` are ordinary `KVSegment`s whose storage planes are PAGE
+    pools instead of per-slot stores (tails stay per slot — an 8-token raw
+    ring is not worth paging):
+
+      packed_k/v : (Lseg, P, Hkv, hd/8, k, k) int8
+      scale_k/v  : (Lseg, P, Hkv, hd/8)       f32
+      tail_k/v   : (Lseg, B, 8, Hkv, hd)      raw dtype
+
+    One page = one 8-token block group ACROSS all layers: every layer of a
+    slot flushes the same block index at the same step, so page index p in
+    segment arrays of every segment belongs to the same logical block.
+    `block_table[b, j]` maps slot b's j-th sequence block to its page; the
+    engine's host-side free list decides which page that is.  Unmapped
+    entries hold 0 (a valid page, so gathers never go out of range) and are
+    unreachable: attention masks `kv_pos < flushed` before any gather.
+    """
+
+    segments: tuple[KVSegment, ...]
+    block_table: jax.Array  # (B, S/8) int32
+
+    def tree_flatten(self):
+        return (self.segments, self.block_table), ()
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("segments"), self.segments),
+                (ga("block_table"), self.block_table)), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children[0]), children[1])
+
+    @property
+    def n_layers(self) -> int:
+        return self.segments[-1].stop
+
+    @property
+    def n_pages(self) -> int:
+        return self.segments[0].packed_k.shape[1]
+
+    @property
+    def max_seq(self) -> int:
+        return self.block_table.shape[1] * BLOCK
+
+    @property
+    def keeps(self) -> tuple[int, ...]:
+        return tuple(s.keep for s in self.segments
+                     for _ in range(s.stop - s.start))
+
+    def page_bytes(self) -> int:
+        """Bytes of one page across all layers (the allocation granule)."""
+        total = 0
+        for s in self.segments:
+            _, _, hkv, nhd, k, _ = s.packed_k.shape
+            total += (s.stop - s.start) * block_group_bytes(k, hkv, nhd * BLOCK)
+        return total
+
+
+def init_paged_cache(cfg, batch: int, max_seq: int, n_pages: int,
+                     keep: int = 4, dtype=jnp.bfloat16,
+                     plan=None) -> PagedKVCache:
+    """Allocate the shared page pool + block tables per `plan`.
+
+    Same per-layer geometry as `init_compressed_cache`, but the block axis
+    is a POOL of `n_pages` pages shared by every slot instead of a dense
+    (B, max_seq/8) store — the feature-map buffer is sized by the traffic
+    you want to hold, not by slots x worst-case depth.
+    """
+    assert max_seq % BLOCK == 0
+    assert n_pages >= 1, n_pages
+    hd = cfg.resolved_head_dim
+    assert hd % BLOCK == 0, f"head_dim {hd} not 8-tileable"
+    plan = plan_lib.as_plan(plan, keep=keep)
+    hkv = cfg.n_kv_heads
+    nh = hd // BLOCK
+    segments = []
+    for start, stop, pol in plan.segments(cfg.n_layers):
+        l, k = stop - start, pol.kv_keep
+        mk = lambda: jnp.zeros((l, n_pages, hkv, nh, k, k), jnp.int8)
+        sc = lambda: jnp.zeros((l, n_pages, hkv, nh), jnp.float32)
+        tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
+        segments.append(KVSegment(mk(), sc(), mk(), sc(), tl(), tl(),
+                                  keep=k, start=start, stop=stop,
+                                  backend=pol.backend))
+    table = jnp.zeros((batch, max_seq // BLOCK), jnp.int32)
+    return PagedKVCache(tuple(segments), table)
+
+
+# ---------------------------------------------------------------------------
 # Per-layer decode update (operates on the [B, ...] slices for one layer)
 # ---------------------------------------------------------------------------
 
@@ -273,6 +400,8 @@ def update_layer(
     pos: jax.Array,    # (B,) per-slot absolute positions (scalar broadcasts)
     keep: int,
     backend: str | None = None,
+    *,
+    flush_page: jax.Array | None = None,  # (B,) page ids (paged pool only)
 ) -> dict[str, jax.Array]:
     """Write each row's new token into its own tail slot; flush per row.
 
@@ -286,6 +415,14 @@ def update_layer(
     A single global cond skips the codec entirely on steps where NO row
     flushes (7 of 8 steps in lock-step serving) — the per-row decision
     stays a masked scatter either way.
+
+    PAGED pool: pass `flush_page` and pool-shaped packed/scale planes
+    (P, Hkv, hd/8, k, k) / (P, Hkv, hd/8).  The flush then scatters row b's
+    block into page `flush_page[b]` instead of (b, pos//8); the engine
+    hands out page ids (its free list is the allocator) and sets
+    out-of-range ids (>= P) for rows that must not flush, which the
+    drop-mode scatter discards.  The caller owns the block-table update —
+    this function never sees the table.
     """
     b = k_new.shape[0]
     pos = as_pos_vec(pos, b)
@@ -304,7 +441,8 @@ def update_layer(
     tail_k = shard_hint(tail_k, "batch", None, "model", None)
     tail_v = shard_hint(tail_v, "batch", None, "model", None)
 
-    ns = layer_cache["packed_k"].shape[1]
+    paged = flush_page is not None
+    ns = layer_cache["packed_k"].shape[1]  # dense: S/8 blocks; paged: Hkv
     flush_row = slot == BLOCK - 1
 
     def flush(args):
@@ -317,6 +455,16 @@ def update_layer(
         qv = jnp.swapaxes(qv, 1, 2)[:, 0]
         sck = jnp.swapaxes(sck, 1, 2)[:, 0]
         scv = jnp.swapaxes(scv, 1, 2)[:, 0]
+        if paged:
+            # guard against stray ids on non-flushing rows: force them out
+            # of range so the drop-mode scatter discards them
+            page = jnp.where(flush_row, flush_page, pk.shape[0])
+            return (
+                pk.at[page].set(qk, mode="drop"),
+                sk.at[page].set(sck, mode="drop"),
+                pv.at[page].set(qv, mode="drop"),
+                sv.at[page].set(scv, mode="drop"),
+            )
         blk = jnp.where(flush_row, pos // BLOCK, ns)  # ns => dropped
         return (
             pk.at[rows, blk].set(qk, mode="drop"),
@@ -337,14 +485,24 @@ def update_layer(
             tail_k, tail_v,
         ),
     )
-    # packed/scale layout must MATCH cache_specs: heads on `model` when they
-    # divide it, else the S/8 block axis (attn_hint implements exactly that
-    # fallback) — a plain heads-only hint would conflict with the pool specs
-    # for non-dividing head counts and force a full-store reshard per step
-    pk = attn_hint(pk, s_axis=1, h_axis=2)
-    pv = attn_hint(pv, s_axis=1, h_axis=2)
-    sk = attn_hint(sk, s_axis=1, h_axis=2)
-    sv = attn_hint(sv, s_axis=1, h_axis=2)
+    if paged:
+        # pool layout per cache_specs: pages ride the data axes (the batch
+        # scatter above crosses banks by design — the page allocator does
+        # not know about devices), heads on `model` when they divide it
+        pk = shard_hint(pk, "batch", "model", None, None, None)
+        pv = shard_hint(pv, "batch", "model", None, None, None)
+        sk = shard_hint(sk, "batch", "model", None)
+        sv = shard_hint(sv, "batch", "model", None)
+    else:
+        # packed/scale layout must MATCH cache_specs: heads on `model` when
+        # they divide it, else the S/8 block axis (attn_hint implements that
+        # fallback) — a plain heads-only hint would conflict with the pool
+        # specs for non-dividing head counts and force a full-store reshard
+        # per step
+        pk = attn_hint(pk, s_axis=1, h_axis=2)
+        pv = attn_hint(pv, s_axis=1, h_axis=2)
+        sk = attn_hint(sk, s_axis=1, h_axis=2)
+        sv = attn_hint(sv, s_axis=1, h_axis=2)
     return dict(packed_k=pk, scale_k=sk, packed_v=pv, scale_v=sv,
                 tail_k=tail_k, tail_v=tail_v)
 
@@ -370,6 +528,7 @@ def attend_compressed(
     kv_block: int = 1024,
     scale: float | None = None,
     backend: str | None = None,
+    block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
 ) -> jax.Array:
     """Online-softmax decode attention where K/V history is decompressed per
     chunk INSIDE the scan — compressed bytes are what stream from HBM.
@@ -377,11 +536,21 @@ def attend_compressed(
     Each row attends under its OWN causal horizon: packed blocks below that
     row's flushed watermark, plus its raw tail (positions pos-pos%8 .. pos)
     merged with the same running-max algebra.
+
+    With `block_table`, packed/scale planes are the shared PAGE POOL
+    ((P, Hkv, hd/8, k, k) / (P, Hkv, hd/8)) and each chunk gathers its
+    blocks through the table first.  Chunk boundaries and every float op
+    after the gather are identical to the dense layout, so greedy decode
+    over a paged pool is bitwise the dense result (tests pin this).
     """
     b, sq, h, hd = q.shape
     pos = as_pos_vec(pos, b)
     pk = layer_cache["packed_k"]
-    _, nblocks_total, hkv, nhd, k, _ = pk.shape
+    if block_table is None:
+        _, nblocks_total, hkv, nhd, k, _ = pk.shape
+    else:
+        _, hkv, nhd, k, _ = pk.shape
+        nblocks_total = block_table.shape[1]
     n_rep = h // hkv
     max_seq = nblocks_total * BLOCK
     scale = scale if scale is not None else 1.0 / np.sqrt(hd)
@@ -398,7 +567,13 @@ def attend_compressed(
     def chunk_body(carry, c):
         m, l, acc = carry
         start = c * bpc
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, bpc, 1)
+        if block_table is None:
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, bpc, 1)
+        else:
+            # gather this chunk's pages: (B, bpc) table slice -> pool rows.
+            # Unmapped entries point at page 0 — valid, and masked below.
+            pages = jax.lax.dynamic_slice_in_dim(block_table, start, bpc, 1)
+            sl = lambda a: a[pages]                       # (B, bpc, Hkv, ...)
         # planes per (B, Hkv): (B, nb, Hkv, ...) -> (B, Hkv, nb, ...)
         kc = decompress_kv_blocks(
             jnp.swapaxes(sl(layer_cache["packed_k"]), 1, 2),
@@ -460,6 +635,7 @@ def attend_auto(
     *,
     kv_block: int = 1024,
     backend: str | None = None,
+    block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
 ) -> jax.Array:
     """Backend-dispatched decode attention over the compressed store.
 
@@ -467,15 +643,18 @@ def attend_auto(
     what stream from HBM; the IDCT runs in VMEM); `reference` (and any other
     backend) uses the pure-JAX online-softmax scan above. Selection follows
     repro.codec.dispatch, same as the block codec itself. Both backends take
-    the per-slot position vector.
+    the per-slot position vector, and both gather paged history through
+    `block_table` when given one (the kernel reads the table on the
+    scalar-prefetch path beside `pos`).
     """
     pos = as_pos_vec(pos, q.shape[0])
     if codec_lib.resolve_backend_name(backend) == "pallas":
         from repro.kernels.fused_attend import ops as fa_ops
 
-        return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block)
+        return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block,
+                                       block_table=block_table)
     return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block,
-                             backend=backend)
+                             backend=backend, block_table=block_table)
 
 
 # ---------------------------------------------------------------------------
@@ -539,3 +718,55 @@ def cache_reset_slot(cache, slot: jax.Array | int):
     """
     slot = jnp.asarray(slot, jnp.int32)
     return jax.tree.map(lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, 0])), cache)
+
+
+def paged_write_slot(cache: PagedKVCache, slot_update, slot: jax.Array,
+                     page_ids: jax.Array, table_row: jax.Array) -> PagedKVCache:
+    """Splice one admitted request into the paged pool.
+
+    `slot_update` is the per-segment tuple of dicts a paged prefill returns:
+    packed/scale planes hold the prompt's OWN blocks only
+    ((Lseg, 1, nb, ...) with nb = bucket/8 — never max_seq/8), tails are the
+    (Lseg, 1, 8, Hkv, hd) raw remainder.  `page_ids` (nb,) carries the
+    engine-assigned page per prompt block, padded with out-of-range ids
+    (>= P) past the prompt's full blocks so the drop-mode scatter ignores
+    the padding blocks; `table_row` (S/8,) is the slot's new block-table
+    row (assigned pages then zeros).  Admission therefore writes O(prompt)
+    pool bytes plus one table row — nothing max_seq-sized is zero-filled.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    segments = []
+    for seg, upd in zip(cache.segments, slot_update):
+        planes = seg.as_tree()
+        new = {}
+        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+            new[key] = planes[key].at[:, page_ids].set(
+                upd[key][:, 0].astype(planes[key].dtype), mode="drop")
+        for key in ("tail_k", "tail_v"):
+            new[key] = jax.lax.dynamic_update_slice_in_dim(
+                planes[key], upd[key].astype(planes[key].dtype), slot, axis=1)
+        segments.append(seg.replace_arrays(new))
+    table = cache.block_table.at[slot].set(table_row)
+    return PagedKVCache(tuple(segments), table)
+
+
+def paged_reset_slot(cache: PagedKVCache, slot: jax.Array) -> PagedKVCache:
+    """Retire one slot: zero its tails and block-table row.
+
+    Page CONTENTS are not touched — the engine's free list reclaims the
+    page ids, and a page is unreachable the moment no table row maps it
+    (the device-side analogue of free()).  Zeroing the table row keeps
+    retired mappings out of gathers and makes reuse auditable in tests.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    segments = []
+    for seg in cache.segments:
+        planes = seg.as_tree()
+        new = dict(planes)
+        for key in ("tail_k", "tail_v"):
+            new[key] = planes[key].at[:, slot].set(
+                jnp.zeros_like(planes[key][:, 0]))
+        segments.append(seg.replace_arrays(new))
+    table = cache.block_table.at[slot].set(
+        jnp.zeros_like(cache.block_table[0]))
+    return PagedKVCache(tuple(segments), table)

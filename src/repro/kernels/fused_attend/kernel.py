@@ -150,3 +150,122 @@ def attend_compressed_plane(
       jnp.asarray(_dct_k_np(k)))
     acc, m_b, l_b = out[0], out[1], out[2]
     return acc, m_b[:, :1], l_b[:, :1]
+
+
+# ---------------------------------------------------------------------------
+# Paged pool: gather history through the block table (scalar prefetch)
+# ---------------------------------------------------------------------------
+
+def _attend_paged_kernel(
+    pos_ref,                    # scalar prefetch: (B,) int32
+    bt_ref,                     # scalar prefetch: (B, nblocks) int32 page ids
+    pk_ref, sk_ref, pv_ref, sv_ref, q_ref, ck_ref,
+    o_ref,
+    m_ref, l_ref, acc_ref,      # VMEM scratch (carried per (b, h) plane)
+    *, keep: int, scale: float,
+):
+    b = pl.program_id(0)
+    step = pl.program_id(2)     # one 8-token block group per grid step
+    ck = ck_ref[...]            # (k, 8) DCT constant (VMEM)
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def dec(p_ref, s_ref):
+        """One int8 page -> f32 (8, hd): per-8x8-block z -> Ck^T z Ck."""
+        z = p_ref[0, 0].astype(jnp.float32) * s_ref[0, 0][..., None, None]
+        t = jnp.einsum("ua,juv,vb->ajb", ck, z, ck)     # (8, nh, 8)
+        return t.reshape(BLOCK, -1)
+
+    kt = dec(pk_ref, sk_ref)
+    vt = dec(pv_ref, sv_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale         # (n_rep, hd)
+    s = jax.lax.dot(q, kt.T, preferred_element_type=jnp.float32)  # (n_rep, 8)
+    kv_pos = step * BLOCK + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK), 1)
+    valid = kv_pos < (pos_ref[b] // BLOCK) * BLOCK      # flushed blocks only
+    s = jnp.where(valid, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, vt, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(step == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0, 0, 0] = acc_ref[...]
+        o_ref[0, 0, 1] = jnp.broadcast_to(m_ref[...], acc_ref.shape)
+        o_ref[0, 0, 2] = jnp.broadcast_to(l_ref[...], acc_ref.shape)
+
+
+def attend_paged(
+    packed_k: jax.Array,   # (P, Hkv, hd/8, k, k) int8 page pool
+    scale_k: jax.Array,    # (P, Hkv, hd/8) f32
+    packed_v: jax.Array,
+    scale_v: jax.Array,
+    q: jax.Array,          # (B, Hkv, n_rep, hd)
+    pos: jax.Array,        # (B,) int32 per-slot positions
+    block_table: jax.Array,  # (B, S/8) int32 page ids
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused decompress+attend over the PAGED pool, all (batch, kv-head)
+    planes in one explicit grid.
+
+    The block table rides the scalar-prefetch path beside `pos`: each grid
+    step's BlockSpec index_map dereferences `bt[b, i]`, so the kernel DMAs
+    exactly the pages the slot owns — HBM traffic is the compressed pages
+    the block table names, never the dense (B, S/8, ...) layout.  Unmapped
+    table entries are 0 (a valid page) and masked by the flushed watermark.
+
+    Returns un-normalized online-softmax stats (acc (B, Hkv, n_rep, hd),
+    m/l (B, Hkv, n_rep, 1)) ready for the raw-tail merge in ops.py.
+    """
+    n_pages, hkv, nh, k, _ = packed_k.shape
+    hd = nh * BLOCK
+    b, _, n_rep, _ = q.shape
+    nblocks = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, nh, k, k),
+                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nh),
+                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0)),
+            pl.BlockSpec((1, 1, nh, k, k),
+                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nh),
+                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0)),
+            pl.BlockSpec((1, 1, n_rep, hd),
+                         lambda bi, h, i, pos, bt: (bi, h, 0, 0)),
+            pl.BlockSpec((k, BLOCK), lambda bi, h, i, pos, bt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 3, n_rep, hd),
+                               lambda bi, h, i, pos, bt: (bi, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, 1), jnp.float32),   # m
+            pltpu.VMEM((n_rep, 1), jnp.float32),   # l
+            pltpu.VMEM((n_rep, hd), jnp.float32),  # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_attend_paged_kernel, keep=k,
+                          scale=1.0 / float(np.sqrt(hd))),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, 3, n_rep, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), block_table.astype(jnp.int32),
+      packed_k, scale_k, packed_v, scale_v, q, jnp.asarray(_dct_k_np(k)))
+    acc, m_b, l_b = out[:, :, 0], out[:, :, 1], out[:, :, 2]
+    return acc, m_b[..., :1], l_b[..., :1]

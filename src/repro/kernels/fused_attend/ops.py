@@ -10,7 +10,10 @@ import numpy as np
 
 from repro.codec import dispatch as codec_dispatch
 from repro.core.kv_cache import as_pos_vec
-from repro.kernels.fused_attend.kernel import attend_compressed_plane
+from repro.kernels.fused_attend.kernel import (
+    attend_compressed_plane,
+    attend_paged,
+)
 from repro.parallel.sharding import attn_hint
 
 BLOCK = 8
@@ -23,6 +26,7 @@ def attend_with_tail(
     *,
     tile_s: int = 512,
     interpret: bool | None = None,
+    block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
 ) -> jax.Array:
     """Kernel-backed equivalent of core.kv_cache.attend_compressed.
 
@@ -30,29 +34,40 @@ def attend_with_tail(
     planes, so every row's kernel invocation masks against that row's own
     flushed watermark. interpret=None auto-selects via the codec dispatch
     rules: compiled on TPU, interpret elsewhere (CPU CI).
+
+    With `block_table` the cache planes are the shared page pool and the
+    fused kernel gathers each slot's pages through the table (block ids on
+    the scalar-prefetch path); the raw-tail merge below is identical.
     """
     interpret = codec_dispatch.resolve_interpret(interpret)
     b, _, h, hd = q.shape
     pk = layer_cache["packed_k"]
-    hkv = pk.shape[2]
+    hkv = pk.shape[1] if block_table is not None else pk.shape[2]
     n_rep = h // hkv
     pos = as_pos_vec(pos, b)
-
-    # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
-    def plane_axes(x):
-        return jnp.swapaxes(x, 1, 2)
-
     qg = q[:, 0].reshape(b, hkv, n_rep, hd)
 
-    kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
-                             interpret=interpret)
-    # vmap over batch (pos mapped: per-slot horizon) then kv-head (shared pos)
-    acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
-                         in_axes=(0, 0, 0, 0, 0, 0))(
-        plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
-        plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
-        qg, pos,
-    )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
+    if block_table is not None:
+        acc, m, l = attend_paged(
+            layer_cache["packed_k"], layer_cache["scale_k"],
+            layer_cache["packed_v"], layer_cache["scale_v"],
+            qg, pos, block_table, interpret=interpret,
+        )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
+    else:
+        # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
+        def plane_axes(x):
+            return jnp.swapaxes(x, 1, 2)
+
+        kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
+                                 interpret=interpret)
+        # vmap over batch (pos mapped: per-slot horizon) then kv-head
+        # (shared pos)
+        acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
+                             in_axes=(0, 0, 0, 0, 0, 0))(
+            plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
+            plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
+            qg, pos,
+        )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
 
     # ---- merge the raw tail (positions pos//8*8 .. pos, per row) ----------
     tk = jnp.swapaxes(layer_cache["tail_k"], 1, 2).astype(jnp.float32)  # (B,Hkv,8,hd)

@@ -60,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--kv-budget-mb", type=float, default=None,
                     help="solve the plan from a KV byte budget instead "
                          "(CompressionPlan.from_budget; overrides --kv-plan)")
+    ap.add_argument("--kv-pool-pages", type=int, default=None,
+                    help="paged KV pool: shared page count (one page = one "
+                         "8-token block group across all layers); decouples "
+                         "slot count from max_seq provisioning")
+    ap.add_argument("--kv-page-budget-mb", type=float, default=None,
+                    help="paged KV pool sized from a byte budget instead "
+                         "(pages = budget // per-plan page bytes)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL serve mesh, e.g. 4x1 or 2x2 (batch "
@@ -98,6 +105,7 @@ def main(argv=None):
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         kv_compress=args.kv_compress, plan=plan,
         temperature=args.temperature, mesh=mesh,
+        pool_pages=args.kv_pool_pages, page_budget_mb=args.kv_page_budget_mb,
     )
     eng = E.Engine(api, params, sc, batch=args.batch, scheduler=args.scheduler)
 
@@ -136,6 +144,14 @@ def main(argv=None):
         print(f"KV pool per device: {ps['kv_bytes_per_device']/1e6:.2f} MB "
               f"of {ps['kv_pool_bytes']/1e6:.2f} MB total "
               f"across {mesh.devices.size} devices")
+    if eng.paged:
+        ps = eng.kv_pool_stats()
+        print(f"paged pool: {ps['pool_pages']} pages x {ps['page_bytes']} B "
+              f"(peak in use {ps['peak_pages_in_use']}), "
+              f"peak live slots {eng.stats['peak_live_slots']}, "
+              f"admissions blocked on pages "
+              f"{eng.stats['admit_blocked_on_pages']}, "
+              f"{ps['slots_per_gb']:.0f} slots/GB")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:12]}{'...' if len(r.out_tokens) > 12 else ''}")
     return done

@@ -297,14 +297,20 @@ def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
             return kv_cache_spec(axes, cfg.n_kv_heads, msize, stacked=True)
         if name in ("c_kv", "k_rope"):              # (L, B, S, r)
             return latent_cache_spec(axes, stacked=True)
-        if name in ("packed_k", "packed_v"):        # (L, B, S/8, Hkv, hd/8, k, k)
+        if name in ("packed_k", "packed_v"):
             h = "model" if head_axis_ok(cfg.n_kv_heads) else None
+            if nd == 6:                             # paged pool (L, P, Hkv, hd/8, k, k)
+                return P(None, dp, h, None, None, None)
             return P(None, dp, None if h else ("model" if has_model else None),
-                     h, None, None, None)
-        if name in ("scale_k", "scale_v"):          # (L, B, S/8, Hkv, hd/8)
+                     h, None, None, None)          # dense (L, B, S/8, Hkv, hd/8, k, k)
+        if name in ("scale_k", "scale_v"):
             h = "model" if head_axis_ok(cfg.n_kv_heads) else None
+            if nd == 4:                             # paged pool (L, P, Hkv, hd/8)
+                return P(None, dp, h, None)
             return P(None, dp, None if h else ("model" if has_model else None),
-                     h, None)
+                     h, None)                      # dense (L, B, S/8, Hkv, hd/8)
+        if name == "block_table":                   # (B, S/8) page ids
+            return P(dp, None)
         if name in ("tail_k", "tail_v"):            # (L, B, 8, Hkv, hd)
             h = "model" if head_axis_ok(cfg.n_kv_heads) else None
             return P(None, dp, None, h, None)
@@ -336,7 +342,7 @@ def cache_shardings(cache_shapes: Any, cfg, mesh: Mesh):
 
 
 def kv_pool_specs(cfg, plan, mesh: Mesh, *, batch: int, max_seq: int,
-                  dtype=None):
+                  dtype=None, n_pages: int | None = None):
     """Cache specs for the compressed KV slot pool straight from the plan.
 
     Builds the `CompressedKVCache` shape tree (one `KVSegment` per contiguous
@@ -344,13 +350,22 @@ def kv_pool_specs(cfg, plan, mesh: Mesh, *, batch: int, max_seq: int,
     int8 DCT blocks, scales and raw tails sharded on the data axes (batch
     slots) with kv heads on `model` — the same placement `param_specs` gives
     the attention weights, so decode never reshards between them.
+
+    With `n_pages` the tree is the PAGED pool instead: pages and block
+    tables shard on the data axes (each device/bank owns a slice of the
+    page pool), heads on `model`, tails per slot as before.
     """
     from repro.core import kv_cache as kvc  # lazy: core imports stay one-way
 
     kw = {} if dtype is None else {"dtype": dtype}
-    shapes = jax.eval_shape(
-        lambda: kvc.init_compressed_cache(cfg, batch, max_seq, plan=plan, **kw)
-    )
+    if n_pages is None:
+        shapes = jax.eval_shape(
+            lambda: kvc.init_compressed_cache(cfg, batch, max_seq, plan=plan,
+                                              **kw))
+    else:
+        shapes = jax.eval_shape(
+            lambda: kvc.init_paged_cache(cfg, batch, max_seq, n_pages,
+                                         plan=plan, **kw))
     return cache_specs(shapes, cfg, mesh)
 
 

@@ -21,6 +21,17 @@ allocated feature-map buffer: slots are occupied exactly as long as their
 request lives, instead of the whole batch being provisioned for the slowest
 request.
 
+PAGED pool (`ServeConfig.pool_pages` / `page_budget_mb`): the dense per-slot
+store becomes a shared page pool + per-slot block tables
+(`core/kv_cache.py::PagedKVCache`) — the paper's block-granular buffer
+allocation taken literally. The engine owns the allocator: a host-side free
+list reserves each request's worst-case pages at admission (so a live slot
+never stalls mid-flush), gates admission on FREE PAGES instead of free
+slots, hands the decode jit a `(B,)` flush-page vector, and re-issues pages
+on retirement. Admission splices only the prompt's own blocks through the
+block table — nothing max_seq-sized is zero-filled — and greedy tokens stay
+bitwise identical to the dense pool while pages are not exhausted.
+
 Mesh-native serving: `ServeConfig.mesh` places the whole serve loop on a
 (data x model) device mesh — batch slots (and every `KVSegment` plane of the
 compressed pool) shard on `data`, attention heads on `model`, mirroring the
@@ -84,13 +95,14 @@ def _param_runs(cfg, params):
 def decode_step_compressed(
     params: Params,
     token: jax.Array,       # (B,)
-    cache: kvc.CompressedKVCache,
+    cache,                  # CompressedKVCache | PagedKVCache
     pos: jax.Array,         # (B,) per-slot positions (scalar broadcasts)
     cfg,
     *,
     kv_block: int = 1024,
     codec_backend: str | None = None,
-) -> tuple[jax.Array, kvc.CompressedKVCache]:
+    flush_page: jax.Array | None = None,  # (B,) page ids (paged pool only)
+) -> tuple[jax.Array, Any]:
     """One-token decode against the DCT-compressed KV store.
 
     Every slot writes its token at its own `pos[b]` (own tail slot, own
@@ -100,9 +112,33 @@ def decode_step_compressed(
     that segment's static keep and backend. Attention and the block codec
     dispatch through repro.codec: the fused decompress+attend Pallas kernel
     on TPU, the pure-JAX scan elsewhere.
+
+    With a `PagedKVCache`, `flush_page[b]` names the page the engine
+    reserved for row b's flush THIS step (out-of-range id = no flush).  The
+    block-table row update happens once here — every layer of a slot
+    flushes the same block index, so the table is shared — and each layer's
+    update/attend scatters/gathers through it.
     """
     assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
-    pos = kvc.as_pos_vec(pos, token.shape[0])
+    b_sz = token.shape[0]
+    pos = kvc.as_pos_vec(pos, b_sz)
+    paged = isinstance(cache, kvc.PagedKVCache)
+    if paged:
+        assert flush_page is not None, "paged decode needs the flush_page vector"
+        nblocks = cache.block_table.shape[1]
+        rows = jnp.arange(b_sz)
+        flush_row = jnp.mod(pos, kvc.BLOCK) == kvc.BLOCK - 1
+        # non-flushing rows are gated by blk=nblocks here (drop) and by
+        # update_layer's own flush_row gate on the pool scatter — stray
+        # page ids for such rows can land nowhere
+        fp = kvc.as_pos_vec(flush_page, b_sz)
+        blk = jnp.where(flush_row, pos // kvc.BLOCK, nblocks)
+        block_table = cache.block_table.at[rows, blk].set(fp, mode="drop")
+        block_table = sh.logical(block_table, "batch", None)
+    else:
+        assert flush_page is None, "flush_page is a paged-pool argument"
+        fp = None
+        block_table = None
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
     positions = pos[:, None]  # (B, 1) per-row rope positions
     norm = T._norm(cfg)
@@ -118,9 +154,10 @@ def decode_step_compressed(
             q = sh.attn_hint(q)  # heads on `model` (matches the cache specs)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
-            lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend)
+            lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend,
+                                   flush_page=fp)
             attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
-                                   backend=backend)
+                                   backend=backend, block_table=block_table)
             attn = sh.attn_hint(attn)
             h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
             if "moe" in p:
@@ -151,6 +188,8 @@ def decode_step_compressed(
         new_segments.append(seg.replace_arrays(new_tree))
 
     logits = T.unembed(params, x, cfg)[:, 0]
+    if paged:
+        return logits, kvc.PagedKVCache(tuple(new_segments), block_table)
     return logits, kvc.CompressedKVCache(tuple(new_segments))
 
 
@@ -206,6 +245,45 @@ def prefill_compressed(
     return logits, kvc.CompressedKVCache(tuple(segments))
 
 
+def prefill_compressed_paged(
+    params: Params,
+    tokens: jax.Array,      # (1|B, bucket) right-padded prompt, bucket % 8 == 0
+    cfg,
+    *,
+    plan=None,
+    keep: int = 4,
+    lengths: jax.Array | None = None,
+    dtype=jnp.bfloat16,
+) -> tuple[jax.Array, tuple]:
+    """Prefill one admission bucket into paged slot-update form.
+
+    Unlike the dense path this never materializes (or zero-fills) a
+    max_seq-sized store: the raw prefill cache is exactly the bucket, each
+    plan segment bulk-compresses only the bucket's blocks, and the result
+    is the per-segment update tree `paged_write_slot` scatters into the
+    pool at engine-assigned page ids.  Admission cost is O(prompt), not
+    O(max_seq) — the paper's "allocate the buffer the layer actually
+    needs", applied to admission.
+    """
+    assert cfg.attn_type == "gqa"
+    plan = plan_lib.as_plan(plan, keep=keep)
+    b, s = tokens.shape
+    assert s % kvc.BLOCK == 0, s
+    lengths = kvc.as_pos_vec(s if lengths is None else lengths, b)
+    logits, raw = T.prefill(params, tokens, cfg, s, cache_dtype=jnp.float32)
+    update = []
+    for start, stop, pol in plan.segments(cfg.n_layers):
+        kseg = pol.kv_keep
+        comp = jax.vmap(
+            lambda k, v: kvc.prefill_compress(k, v, kseg, pos=lengths,
+                                              backend=pol.backend)
+        )(raw["k"][start:stop], raw["v"][start:stop])  # vmap over layers
+        comp["tail_k"] = comp["tail_k"].astype(dtype)
+        comp["tail_v"] = comp["tail_v"].astype(dtype)
+        update.append(comp)
+    return logits, tuple(update)
+
+
 # ---------------------------------------------------------------------------
 # Step factories
 # ---------------------------------------------------------------------------
@@ -223,11 +301,39 @@ class ServeConfig:
     codec_backend: str | None = None  # None = auto (repro.codec.dispatch)
     mesh: Any = None             # jax.sharding.Mesh: shard the serve loop on
                                  # (data, model); None = single-device path
+    # Paged pool (the paper's dynamic feature-map buffer allocation): set
+    # either knob to replace the dense per-slot store with a shared page
+    # pool + block tables. `pool_pages` sizes the pool directly in 8-token
+    # block groups; `page_budget_mb` solves the page count from a byte
+    # budget using the plan's per-layer accounting (pool_pages wins when
+    # both are set). Requires kv_compress on a GQA family with the
+    # continuous scheduler.
+    pool_pages: int | None = None
+    page_budget_mb: float | None = None
 
     def resolved_plan(self) -> plan_lib.CompressionPlan:
         """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
         return plan_lib.as_plan(self.plan, keep=self.kv_keep,
                                 backend=self.codec_backend)
+
+    @property
+    def paged(self) -> bool:
+        return self.pool_pages is not None or self.page_budget_mb is not None
+
+    def resolved_pool_pages(self, cfg) -> int:
+        """Page count of the pool: explicit, or solved from the byte budget
+        with the plan's per-layer page size (a page spans every layer, so
+        its size is the summed per-layer block-group bytes)."""
+        if self.pool_pages is not None:
+            return int(self.pool_pages)
+        assert self.page_budget_mb is not None
+        page_b = self.resolved_plan().page_bytes(cfg)
+        pages = int(self.page_budget_mb * 1e6 // page_b)
+        if pages < 1:
+            raise ValueError(
+                f"page_budget_mb={self.page_budget_mb} holds no page "
+                f"(one page = {page_b} B across {cfg.n_layers} layers)")
+        return pages
 
 
 def make_steps(api: ModelAPI, sc: ServeConfig):
@@ -245,6 +351,30 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
     cfg = api.cfg
     use_comp = sc.kv_compress and cfg.attn_type == "gqa" and \
         cfg.resolved_head_dim % 8 == 0 and cfg.vec_pos_decode
+
+    if sc.paged and not use_comp:
+        raise ValueError(
+            "paged KV pool needs kv_compress=True on a GQA family with "
+            f"per-slot positions (arch {cfg.name}: attn_type={cfg.attn_type}, "
+            f"vec_pos_decode={cfg.vec_pos_decode})")
+
+    if use_comp and sc.paged:
+        plan = sc.resolved_plan()
+        n_pages = sc.resolved_pool_pages(cfg)
+
+        def prefill_fn(params, tokens, lengths=None):
+            return prefill_compressed_paged(params, tokens, cfg, plan=plan,
+                                            lengths=lengths)
+
+        def decode_fn(params, token, cache, pos, flush_page):
+            return decode_step_compressed(params, token, cache, pos, cfg,
+                                          kv_block=sc.kv_block,
+                                          codec_backend=sc.codec_backend,
+                                          flush_page=flush_page)
+
+        cache_init = lambda b: kvc.init_paged_cache(cfg, b, sc.max_seq,
+                                                    n_pages, plan=plan)
+        return prefill_fn, decode_fn, cache_init, True
 
     if use_comp:
         plan = sc.resolved_plan()
@@ -392,13 +522,48 @@ class Engine:
         prefill_fn, decode_fn, cache_init, vec_pos = make_steps(api, sc)
         self.vec_pos = vec_pos
         self.scheduler = scheduler if vec_pos else "static"
+        self.paged = sc.paged
+        if self.paged:
+            if self.scheduler != "continuous":
+                raise ValueError("paged KV pool requires the continuous "
+                                 "scheduler (pages follow per-slot lifetimes)")
+            # host-side page allocator: the free list IS the allocation
+            # policy — the device only ever sees page ids it was handed
+            self._n_pages = sc.resolved_pool_pages(api.cfg)
+            self._free_pages = list(range(self._n_pages))
+            self._slot_pages: list[list[int]] = [[] for _ in range(batch)]
         self._cache_init_raw = cache_init  # un-jitted: pool accounting
         if sc.mesh is None:
             self._prefill = jax.jit(prefill_fn)
             self._decode = jax.jit(decode_fn)
             self._cache_init = cache_init
-            self._write = jax.jit(cache_write_slot)
-            self._reset = jax.jit(cache_reset_slot)
+            if self.paged:
+                self._write = jax.jit(kvc.paged_write_slot)
+                self._reset = jax.jit(kvc.paged_reset_slot)
+            else:
+                self._write = jax.jit(cache_write_slot)
+                self._reset = jax.jit(cache_reset_slot)
+        elif self.paged:
+            # paged + mesh: pin the decode hot loop (params / pool / (B,)
+            # vectors) with explicit shardings; admission ops are per-request
+            # and bucket-shaped, so they jit with the pool OUTPUT pinned and
+            # inputs left to placement propagation (batch-1 tensors are tiny)
+            shd = serve_shardings(api, params, sc, batch, cache_init)
+            params = jax.device_put(params, shd["params"])
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(shd["params"], shd["vec"], shd["pool"],
+                              shd["vec"], shd["vec"]),
+                out_shardings=(shd["logits_decode"], shd["pool"]),
+            )
+            self._prefill = jax.jit(prefill_fn)
+            pool_init = jax.jit(lambda: cache_init(batch),
+                                out_shardings=shd["pool"])
+            self._cache_init = lambda b: pool_init()
+            self._write = jax.jit(kvc.paged_write_slot,
+                                  out_shardings=shd["pool"])
+            self._reset = jax.jit(kvc.paged_reset_slot,
+                                  out_shardings=shd["pool"])
         else:
             shd = serve_shardings(api, params, sc, batch, cache_init)
             # place params once; the jits below pin the same shardings, so no
@@ -442,7 +607,9 @@ class Engine:
         self.params = params
         self.stats = {"requests": 0, "tokens_out": 0, "steps": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
-                      "slot_steps_live": 0, "slot_steps_total": 0}
+                      "slot_steps_live": 0, "slot_steps_total": 0,
+                      "peak_live_slots": 0, "admit_blocked_on_pages": 0,
+                      "peak_pages_in_use": 0}
 
     # ------------------------------------------------------------------ util
     def _sample(self, logits: jax.Array) -> jax.Array:
@@ -458,15 +625,29 @@ class Engine:
     def kv_pool_stats(self) -> dict:
         """Analytic footprint of this engine's KV pool: total bytes and the
         per-device slice under `sc.mesh` (the banked-buffer accounting —
-        what one device/bank actually holds). No allocation: eval_shape."""
+        what one device/bank actually holds). No allocation: eval_shape.
+
+        On a paged engine the report adds the allocator's view: pool pages,
+        page bytes, pages currently and peak in use, and slots-per-GB (how
+        many concurrent slots one GB of pool supports at this geometry —
+        the headline number the paged pool improves)."""
         shapes = jax.eval_shape(lambda: self._cache_init_raw(self.batch))
         total = sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
                     for l in jax.tree.leaves(shapes))
         mesh = self.sc.mesh
         per_device = float(total) if mesh is None else sh.per_device_bytes(
             shapes, sh.cache_specs(shapes, self.api.cfg, mesh), mesh)
-        return {"kv_pool_bytes": int(total),
-                "kv_bytes_per_device": per_device}
+        out = {"kv_pool_bytes": int(total),
+               "kv_bytes_per_device": per_device,
+               "slots_per_gb": self.batch / max(total / 1e9, 1e-12)}
+        if self.paged:
+            out.update(
+                pool_pages=self._n_pages,
+                page_bytes=self.sc.resolved_plan().page_bytes(self.api.cfg),
+                pages_in_use=self._n_pages - len(self._free_pages),
+                peak_pages_in_use=self.stats["peak_pages_in_use"],
+            )
+        return out
 
     # ------------------------------------------------------------------ API
     def generate(self, requests: list[Request]) -> list[Request]:
@@ -491,6 +672,21 @@ class Engine:
         return queue
 
     # ------------------------------------------------- continuous scheduler
+    def _pages_needed(self, r: Request) -> int:
+        """Worst-case pages request `r` can flush over its whole lifetime.
+
+        Positions written span [0, min(plen + max_new - 1, max_seq)); a page
+        is consumed per completed 8-token block, so reserving this many at
+        admission guarantees a live slot never stalls mid-decode for a page
+        (slot preemption is the ROADMAP follow-on that would relax this).
+        """
+        horizon = min(len(r.prompt) + r.max_new - 1, self.sc.max_seq)
+        return horizon // kvc.BLOCK
+
+    def _release_pages(self, slot: int) -> None:
+        self._free_pages.extend(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+
     def _admit(self, r: Request, cache, slot: int):
         """Prefill one request (batch=1) and splice it into `slot`."""
         plen = len(r.prompt)
@@ -503,7 +699,21 @@ class Engine:
         padded[0, :plen] = r.prompt
         logits, slot_cache = self._prefill(
             self.params, jnp.asarray(padded), jnp.asarray([plen], jnp.int32))
-        cache = self._write(cache, slot_cache, jnp.int32(slot))
+        if self.paged:
+            # splice through the block table: the prompt's full blocks land
+            # in the slot's reserved pages; padding blocks of the bucket are
+            # dropped (out-of-range page id); the partial block stays in the
+            # tail ring. Nothing max_seq-sized is written.
+            prompt_blocks = plen // kvc.BLOCK
+            pages = self._slot_pages[slot]
+            page_ids = np.full(bucket // kvc.BLOCK, self._n_pages, np.int32)
+            page_ids[:prompt_blocks] = pages[:prompt_blocks]
+            row = np.zeros(self.sc.max_seq // kvc.BLOCK, np.int32)
+            row[:prompt_blocks] = pages[:prompt_blocks]
+            cache = self._write(cache, slot_cache, jnp.int32(slot),
+                                jnp.asarray(page_ids), jnp.asarray(row))
+        else:
+            cache = self._write(cache, slot_cache, jnp.int32(slot))
         first = int(np.asarray(self._sample(logits[:, plen - 1]))[0])
         return first, cache
 
@@ -514,14 +724,40 @@ class Engine:
         cache = self._cache_init(self.batch)
         qi = 0
         while True:
-            # ---- admission: fill every free slot from the queue ----------
+            # ---- admission: fill free slots from the queue (paged pools
+            # additionally gate on free pages, FCFS) ----------------------
             for i in range(self.batch):
                 if slots[i] is not None or qi >= len(queue):
                     continue
                 r = queue[qi]
+                if self.paged:
+                    need = self._pages_needed(r)
+                    if need > self._n_pages:
+                        raise ValueError(
+                            f"request {r.uid} needs {need} pages > pool of "
+                            f"{self._n_pages} (raise pool_pages/page_budget_mb"
+                            " or lower max_new)")
+                    if need > len(self._free_pages):
+                        # blocked on pages, not slots: keep decoding; the
+                        # next retirement frees pages and re-tries (FCFS, so
+                        # later small requests don't starve this one)
+                        self.stats["admit_blocked_on_pages"] += 1
+                        break
+                    self._slot_pages[i] = [self._free_pages.pop()
+                                           for _ in range(need)]
+                    used = self._n_pages - len(self._free_pages)
+                    self.stats["peak_pages_in_use"] = max(
+                        self.stats["peak_pages_in_use"], used)
                 qi += 1
                 t0 = time.perf_counter()
-                first, cache = self._admit(r, cache, i)
+                try:
+                    first, cache = self._admit(r, cache, i)
+                except Exception:
+                    if self.paged:
+                        # admission failed (e.g. prompt bucket > max_seq):
+                        # the reservation must not leak out of the pool
+                        self._release_pages(i)
+                    raise
                 self.stats["prefill_s"] += time.perf_counter() - t0
                 r.out_tokens.append(first)
                 self.stats["tokens_out"] += 1
@@ -530,6 +766,8 @@ class Engine:
                         or plen >= self.sc.max_seq:
                     r.done = True  # finished at admission — no decode step
                     cache = self._reset(cache, jnp.int32(i))
+                    if self.paged:
+                        self._release_pages(i)
                 else:
                     slots[i] = r
                     pos[i] = plen
@@ -539,10 +777,23 @@ class Engine:
                 if qi >= len(queue):
                     return
                 continue  # everything retired at admission; admit more
+            self.stats["peak_live_slots"] = max(
+                self.stats["peak_live_slots"], len(live))
             # ---- one decode step over the pool, per-slot positions -------
             t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, jnp.asarray(token), cache,
-                                         jnp.asarray(pos))
+            if self.paged:
+                # hand each flushing row its reserved page; every other row
+                # gets an out-of-range id the device scatter drops
+                fp = np.full(self.batch, self._n_pages, np.int32)
+                for i in live:
+                    if pos[i] % kvc.BLOCK == kvc.BLOCK - 1:
+                        fp[i] = self._slot_pages[i][pos[i] // kvc.BLOCK]
+                logits, cache = self._decode(self.params, jnp.asarray(token),
+                                             cache, jnp.asarray(pos),
+                                             jnp.asarray(fp))
+            else:
+                logits, cache = self._decode(self.params, jnp.asarray(token),
+                                             cache, jnp.asarray(pos))
             nxt = np.asarray(self._sample(logits))
             self.stats["decode_s"] += time.perf_counter() - t0
             self.stats["steps"] += 1
@@ -562,11 +813,16 @@ class Engine:
                     pos[i] = 0
                     token[i] = 0
                     cache = self._reset(cache, jnp.int32(i))
+                    if self.paged:
+                        self._release_pages(i)
 
     # ----------------------------------------------------- static scheduler
     def _run_wave(self, wave: list[Request]) -> None:
         """Lock-step wave: right-aligned prompts, one scalar position."""
         assert len(wave) <= self.batch
+        # every wave request is live from prefill until it retires
+        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
+                                            len(wave))
         slots = list(wave) + [
             Request(uid=-1, prompt=np.zeros(kvc.BLOCK, np.int32), max_new=1)
             for _ in range(self.batch - len(wave))

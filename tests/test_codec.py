@@ -99,6 +99,76 @@ def test_rle_and_csr_sane():
     assert encode_lib.entropy_bound_bits(x) < encode_lib.dense_bits(x)
 
 
+def _sram_bank_occupancy_loop(index, flip=True):
+    """The original per-block Python loop — oracle for the vectorized form."""
+    idx = np.asarray(index, dtype=bool).reshape(-1, 8, 8)
+    fills = np.zeros(8, dtype=np.int64)
+    for b, blk in enumerate(idx):
+        rows = blk[::-1] if (flip and b % 2 == 1) else blk
+        fills += rows.sum(axis=1)
+    depth = int(fills.max()) if len(idx) else 0
+    return depth, int(idx.sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(nblocks=st.integers(0, 9), flip=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_sram_bank_occupancy_vectorized_exact_parity(nblocks, flip, seed):
+    """Vectorized bank model == per-block loop, bit for bit — including odd
+    block counts (whose last block IS a flip row) and the empty batch."""
+    rng = np.random.default_rng(seed)
+    idx = rng.random((nblocks, 8, 8)) < rng.random()
+    assert encode_lib.sram_bank_occupancy(idx, flip=flip) == \
+        _sram_bank_occupancy_loop(idx, flip=flip)
+
+
+def test_sram_bank_occupancy_empty_and_all_zero():
+    assert encode_lib.sram_bank_occupancy(np.zeros((0, 8, 8), bool)) == (0, 0)
+    assert encode_lib.sram_bank_occupancy(np.zeros((3, 8, 8), bool)) == (0, 0)
+    assert encode_lib.sram_utilization(np.zeros((3, 8, 8), bool)) == 1.0
+
+
+def test_sram_bank_occupancy_does_not_mutate_input():
+    idx = np.ones((4, 8, 8), dtype=bool)
+    idx.setflags(write=False)  # the flip must not write through the input
+    assert encode_lib.sram_bank_occupancy(idx, flip=True) == (32, 256)
+
+
+# --------------------------- masked-lane contract --------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), level=st.integers(0, 3))
+def test_paper_decompress_invariant_to_masked_lane_garbage(seed, level):
+    """The paper's hardware never stores values under a zero index bit, so
+    our dense carrier's payload there is garbage BY CONTRACT (encode.py).
+    Decode and storage accounting must be invariant to corrupting it."""
+    from dataclasses import replace
+
+    from repro import codec
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(natural_image(rng, 24, 16), jnp.float32)
+    c = codec.paper_compress(x, compressor.CompressionPolicy(level=level))
+    idx = np.asarray(c.index)
+    assert not idx.all(), "need at least one masked lane to corrupt"
+    garbage = rng.integers(-(2**20), 2**20, idx.shape)
+    values = np.where(idx, np.asarray(c.values), garbage).astype(np.int32)
+    corrupted = replace(c, values=jnp.asarray(values))
+
+    np.testing.assert_array_equal(
+        np.asarray(codec.paper_decompress(c)),
+        np.asarray(codec.paper_decompress(corrupted)))
+    assert int(codec.paper_storage_bits(c)) == \
+        int(codec.paper_storage_bits(corrupted))
+    # the gated carrier view is the sanctioned read path for accounting
+    np.testing.assert_array_equal(
+        np.asarray(codec.paper_masked_values(corrupted)),
+        np.asarray(codec.paper_masked_values(c)))
+    assert encode_lib.paper_codec_bits(
+        np.asarray(codec.paper_masked_values(corrupted))) == \
+        encode_lib.paper_codec_bits(np.asarray(codec.paper_masked_values(c)))
+
+
 # --------------------------- end-to-end ------------------------------------
 
 @pytest.mark.parametrize("level", [0, 1, 2, 3])

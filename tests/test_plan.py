@@ -246,6 +246,7 @@ def trained_lm():
     return api, state["params"]
 
 
+@pytest.mark.slow
 def test_pyramid_plan_serves_like_uniform_with_smaller_footprint(trained_lm):
     """Acceptance: a pyramid plan through the continuous-batching engine
     reproduces the uniform-plan greedy outputs on the tested prompts while
@@ -288,3 +289,53 @@ def test_moe_segments_cross_stack_boundary():
         logits, cache = dec(params, t, cache, jnp.int32(16 + s))
         t = jnp.argmax(logits, -1).astype(jnp.int32)
     assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_storage_accounting_single_definition():
+    """Pool reports, codec stats and the analytic plan accounting all derive
+    from `codec.api.tile_bytes` — pin them against each other AND against
+    the literal array buffers so the definitions can't drift again."""
+    from repro import codec
+    from repro.codec.api import tile_bytes
+
+    cfg = model_api.get_config("yi_6b").reduced()
+    batch, max_seq = 3, 64
+    plan = as_plan("0-1:keep=8,2-:keep=4")
+    cache = KV.init_compressed_cache(cfg, batch, max_seq, plan=plan,
+                                     dtype=jnp.bfloat16)
+
+    for seg in cache.segments:
+        literal = (seg.packed_k.size + seg.packed_v.size            # int8
+                   + 4 * (seg.scale_k.size + seg.scale_v.size)      # f32
+                   + 2 * (seg.tail_k.size + seg.tail_v.size))       # bf16
+        assert seg.nbytes() == literal
+
+    # cache report == plan analytic == engine pool report (eval_shape bytes)
+    assert cache.storage_stats()["kv_bytes"] == \
+        plan.kv_cache_bytes(cfg, max_seq, batch=batch)
+    api = model_api.build_reduced("yi_6b")
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = E.Engine(api, params,
+                   E.ServeConfig(max_seq=max_seq, kv_compress=True, plan=plan,
+                                 codec_backend="reference"), batch=batch)
+    assert eng.kv_pool_stats()["kv_pool_bytes"] == \
+        plan.kv_cache_bytes(cfg, max_seq, batch=batch)
+
+    # per-token view matches the codec container's bytes-per-element
+    for keep in (3, 4, 6, 8):
+        c = codec.compress(jnp.ones((16, 16), jnp.float32), keep=keep)
+        assert c.nbytes_per_element() == tile_bytes(keep) / 64
+        stats = codec.storage_stats(c)
+        assert stats["compressed_bits"] == \
+            (16 // 8) * (16 // 8) * tile_bytes(keep) * 8
+        uni = KV.init_compressed_cache(cfg, 1, 64, keep=keep)
+        hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        assert uni.nbytes_per_token_per_layer() == \
+            KV.block_group_bytes(keep, hkv, hd) / 8 == \
+            2 * hkv * hd * c.nbytes_per_element()
+
+    # the paged pool charges the same per-block definition
+    paged = KV.init_paged_cache(cfg, batch, max_seq, n_pages=10, plan=plan)
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    assert paged.page_bytes() == plan.page_bytes(cfg) == sum(
+        KV.block_group_bytes(k, hkv, hd) for k in plan.keeps(cfg.n_layers))

@@ -31,6 +31,7 @@ def _requests(n=8, seed=42):
 # Per-slot position vectors in the cache primitives
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_update_and_attend_vector_pos_match_per_row_scalar(lm):
     """One batched run with per-slot positions == each row's scalar run."""
     api, _ = lm
@@ -77,6 +78,7 @@ def test_update_and_attend_vector_pos_match_per_row_scalar(lm):
     np.testing.assert_allclose(np.asarray(o_kern), np.asarray(out_vec), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_prefill_compress_per_row_lengths(lm):
     """Bulk prefill with per-row lengths == per-row incremental feeds."""
     api, _ = lm
@@ -122,6 +124,7 @@ def test_cache_reset_slot(lm):
 # Engine: continuous scheduling semantics
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_continuous_matches_single_request_runs_compressed(lm):
     """8 requests, distinct prompt lengths/budgets, 4 slots, compressed KV:
     greedy per-request outputs == running each request alone (acceptance
@@ -146,6 +149,7 @@ def test_continuous_matches_single_request_runs_compressed(lm):
         assert r.out_tokens == want.out_tokens, (r.uid, r.out_tokens, want.out_tokens)
 
 
+@pytest.mark.slow
 def test_continuous_matches_single_request_runs_mla():
     """MLA (latent cache) continuous batching == solo runs: pins the per-row
     scatter on c_kv/k_rope and the per-row horizon in mla_decode_attention."""
@@ -168,6 +172,7 @@ def test_continuous_matches_single_request_runs_mla():
         assert r.out_tokens == want.out_tokens, (r.uid, r.out_tokens, want.out_tokens)
 
 
+@pytest.mark.slow
 def test_continuous_matches_single_request_runs_raw(lm):
     api, params = lm
     sc = E.ServeConfig(max_seq=64)
@@ -179,6 +184,7 @@ def test_continuous_matches_single_request_runs_raw(lm):
         assert r.out_tokens == want.out_tokens, (r.uid,)
 
 
+@pytest.mark.slow
 def test_midstream_eos_retires_and_reuses_slot(lm):
     """EOS mid-stream retires the slot; the freed slot serves queued work."""
     api, params = lm

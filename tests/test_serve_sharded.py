@@ -21,6 +21,8 @@ from repro.parallel import mesh as mesh_lib
 from repro.parallel import sharding as sh
 from repro.serve import engine as E
 
+pytestmark = pytest.mark.slow  # mesh parity: tier1-mesh job only
+
 if len(jax.devices()) < 4:
     pytest.skip(
         "needs 4 devices (XLA_FLAGS=--xla_force_host_platform_device_count=4)",
@@ -71,6 +73,24 @@ def test_compressed_parity_on_mesh(lm, mesh_spec, plan):
     assert eng.scheduler == "continuous"
     assert eng.stats["requests"] == 8  # 8 requests over 4 slots => slot reuse
     assert got == base
+
+
+@pytest.mark.parametrize("mesh_spec", MESHES)
+@pytest.mark.parametrize("plan", [8, PYRAMID], ids=["uniform", "pyramid"])
+def test_paged_pool_parity_on_mesh(lm, mesh_spec, plan):
+    """The PAGED pool on a mesh (pages + block tables on `data`, heads on
+    `model`) must reproduce the single-device dense engine bit for bit,
+    through retirement/re-admission and host-side page reuse."""
+    api, params = lm
+    kw = dict(max_seq=64, kv_compress=True, plan=plan,
+              codec_backend="reference")
+    base, _ = _serve(api, params, E.ServeConfig(**kw))
+    got, eng = _serve(api, params,
+                      E.ServeConfig(**kw, pool_pages=24,
+                                    mesh=mesh_lib.make_serve_mesh(mesh_spec)))
+    assert eng.paged and eng.scheduler == "continuous"
+    assert got == base
+    assert sorted(eng._free_pages) == list(range(24))  # pool fully drained
 
 
 @pytest.mark.parametrize("mesh_spec", MESHES)
