@@ -750,6 +750,38 @@ def paged_write_slot(cache: PagedKVCache, slot_update, slot: jax.Array,
     return PagedKVCache(tuple(segments), table)
 
 
+def paged_write_rows(cache: PagedKVCache, rows_update, slots: jax.Array,
+                     page_ids: jax.Array, table_rows: jax.Array) -> PagedKVCache:
+    """Splice a PACKED admission (R requests in one bucketed prefill) into
+    the paged pool — the batched `paged_write_slot`.
+
+    `rows_update` is the per-segment tuple of dicts a paged prefill returns
+    with R rows: packed/scale planes (Lseg, R, nb, ...), tails
+    (Lseg, R, 8, Hkv, hd).  `slots` (R,) assigns row r to pool slot
+    slots[r]; `page_ids` (R, nb) carries each row's engine-assigned page per
+    prompt block; `table_rows` (R, S/8) the new block-table rows.  Rows the
+    admission group padded to a warmed row count carry out-of-range slot
+    ids (>= B) and all-out-of-range page ids, so every one of their writes
+    drops — a padding row can land nowhere.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    segments = []
+    for seg, upd in zip(cache.segments, rows_update):
+        planes = seg.as_tree()
+        new = {}
+        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+            # planes[key]: (Lseg, P, ...); page_ids (R, nb) gathers to
+            # (Lseg, R, nb, ...) — exactly upd[key]'s shape
+            new[key] = planes[key].at[:, page_ids].set(
+                upd[key].astype(planes[key].dtype), mode="drop")
+        for key in ("tail_k", "tail_v"):
+            new[key] = planes[key].at[:, slots].set(
+                upd[key].astype(planes[key].dtype), mode="drop")
+        segments.append(seg.replace_arrays(new))
+    table = cache.block_table.at[slots].set(table_rows, mode="drop")
+    return PagedKVCache(tuple(segments), table)
+
+
 def paged_reset_slot(cache: PagedKVCache, slot: jax.Array) -> PagedKVCache:
     """Retire one slot: zero its tails and block-table row.
 

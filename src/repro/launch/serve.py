@@ -68,6 +68,22 @@ def main(argv=None):
                     help="paged KV pool sized from a byte budget instead "
                          "(pages = budget // per-plan page bytes)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-buckets", default=None,
+                    help="comma-separated prompt-length buckets (multiples "
+                         "of 8, <= max-seq) the engine compiles prefill at; "
+                         "admission rounds prompts UP to the ladder. Default: "
+                         "powers-of-two multiples of 8 capped at max-seq")
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="compile the whole prefill ladder + decode step at "
+                         "engine build, so no XLA compile happens under "
+                         "traffic (time reported as warmup_s)")
+    ap.add_argument("--no-packed-admission", action="store_true",
+                    help="admit one prompt per prefill call instead of "
+                         "packing all free slots into one bucketed call")
+    ap.add_argument("--sync-host", action="store_true",
+                    help="disable the one-step-deep async pipeline: read "
+                         "each decode step's tokens before dispatching the "
+                         "next, and run bookkeeping inline")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL serve mesh, e.g. 4x1 or 2x2 (batch "
                          "slots shard on data, attention heads on model); "
@@ -101,11 +117,16 @@ def main(argv=None):
             cfg, args.max_seq, args.kv_budget_mb * 1e6, batch=args.batch)
     else:
         plan = plan_lib.as_plan(args.kv_plan, keep=args.kv_keep)
+    buckets = tuple(int(b) for b in args.prefill_buckets.split(",")) \
+        if args.prefill_buckets else None
     sc = E.ServeConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         kv_compress=args.kv_compress, plan=plan,
         temperature=args.temperature, mesh=mesh,
         pool_pages=args.kv_pool_pages, page_budget_mb=args.kv_page_budget_mb,
+        prefill_buckets=buckets, aot_warmup=args.aot_warmup,
+        packed_admission=not args.no_packed_admission,
+        async_host=not args.sync_host,
     )
     eng = E.Engine(api, params, sc, batch=args.batch, scheduler=args.scheduler)
 
@@ -132,7 +153,17 @@ def main(argv=None):
           f"mesh={mesh_lib.mesh_desc(mesh)}")
     print(f"requests={st['requests']} decode_steps={st['steps']} "
           f"tokens_out={st['tokens_out']} decode_tok/s={dec_tps:.1f} "
-          f"slot_util={eng.slot_utilization():.2f} prefill_s={st['prefill_s']:.2f}")
+          f"slot_util={eng.slot_utilization():.2f}")
+    print(f"time split: warmup_s={st['warmup_s']:.2f} "
+          f"prefill_s={st['prefill_s']:.2f} decode_s={st['decode_s']:.2f} "
+          f"host_s={st['host_s']:.2f}")
+    if eng.scheduler == "continuous":
+        lat = eng.latency_stats()
+        print(f"latency: ttft p50={lat['ttft_p50_s']*1e3:.1f}ms "
+              f"p99={lat['ttft_p99_s']*1e3:.1f}ms | "
+              f"itl p50={lat['itl_p50_s']*1e3:.1f}ms "
+              f"p99={lat['itl_p99_s']*1e3:.1f}ms "
+              f"(ladder={list(eng.ladder.buckets)})")
     raw_b = kv_bytes_per_token(cfg, False, plan)
     cmp_b = kv_bytes_per_token(cfg, True, plan)
     print(f"KV bytes/token: raw {raw_b:.0f} vs compressed {cmp_b:.0f} "

@@ -184,6 +184,18 @@ def data_batch_spec(mesh_axes: tuple[str, ...], ndim: int,
     return spec
 
 
+def step_vec_sharding(mesh: Mesh, batch: int):
+    """NamedSharding for the serve loop's device-resident (B,) per-slot
+    vectors — the fused decode step's token/position state and its sampled
+    token output.  Slots ride the data axes exactly like the pool's batch
+    dim, so the step's scatter/gather stays shard-local; a batch the data
+    axes don't divide replicates (fit_spec)."""
+    from jax.sharding import NamedSharding
+
+    spec = data_batch_spec(tuple(mesh.axis_names), 1, dim0=batch, mesh=mesh)
+    return NamedSharding(mesh, spec)
+
+
 def activation_spec(mesh_axes: tuple[str, ...], *, seq_sharded: bool = False) -> P:
     """(B, S, D) activations: batch on DP; optionally S on model (seq-par)."""
     axes = tuple(a for a in BATCH_AXES if a in mesh_axes)

@@ -164,6 +164,29 @@ class Roofline:
         return d
 
 
+def hbm_bandwidth_row(bytes_per_step: float, compute_flops: float = 0.0) -> dict:
+    """Achieved vs peak HBM bandwidth for one (memory-streaming) step.
+
+    `bytes_per_step` is what the kernel ACTUALLY streams (for attend_paged:
+    only pages mapped in the block table, their scales, the raw tails, and
+    the table itself — never unmapped pool capacity). The step-time bound is
+    the roofline max of the memory and compute terms; achieved bandwidth is
+    the useful stream over that bound, so `hbm_utilization` < 1 exactly when
+    the step leaves the memory system idle waiting on compute.
+    """
+    mem_s = bytes_per_step / HBM_BW
+    comp_s = compute_flops / PEAK_FLOPS
+    step_s = max(mem_s, comp_s)
+    achieved = bytes_per_step / step_s if step_s else 0.0
+    return {
+        "bytes_per_step": float(bytes_per_step),
+        "step_bound_s": step_s,
+        "achieved_bw_gbs": achieved / 1e9,
+        "peak_bw_gbs": HBM_BW / 1e9,
+        "hbm_utilization": achieved / HBM_BW,
+    }
+
+
 def model_flops(cfg, shape_name: str, n_layers_factor: float = 1.0) -> float:
     """Analytic useful FLOPs per step: 6ND train / 2ND prefill / 2ND' decode."""
     from repro.configs.base import SHAPES

@@ -49,7 +49,9 @@ back to raw for MLA and logs the fact.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -66,6 +68,7 @@ from repro.models import transformer as T
 from repro.models.api import ModelAPI
 from repro.parallel import mesh as mesh_lib
 from repro.parallel import sharding as sh
+from repro.serve import pipeline as pl
 
 Params = dict[str, Any]
 
@@ -310,6 +313,23 @@ class ServeConfig:
     # continuous scheduler.
     pool_pages: int | None = None
     page_budget_mb: float | None = None
+    # Serving pipeline (continuous scheduler only). `prefill_buckets` fixes
+    # the AOT prompt-length ladder admission rounds up to (None = automatic
+    # powers-of-two multiples of the 8-token block capped at max_seq); a
+    # prompt that fits no bucket raises instead of silently compiling under
+    # traffic. `aot_warmup` compiles the whole serving surface (every
+    # rows x bucket admission shape, the fused decode step, slot splice /
+    # reset / fix) at Engine construction; the cost lands in
+    # stats["warmup_s"], never in prefill/decode time. `packed_admission`
+    # admits all currently-free slots in ONE bucketed prefill call;
+    # `async_host` runs the decode loop one step deep (dispatch t+1 before
+    # reading t's tokens) with bookkeeping on a background thread. Both
+    # default on; turning them off restores the serial/synchronous loop the
+    # parity tests pin against.
+    prefill_buckets: Any = None
+    aot_warmup: bool = False
+    packed_admission: bool = True
+    async_host: bool = True
 
     def resolved_plan(self) -> plan_lib.CompressionPlan:
         """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
@@ -423,6 +443,65 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
     return prefill_fn, decode_fn, cache_init, False
 
 
+def make_fused_steps(prefill_fn, decode_fn, sc: ServeConfig, *, paged: bool):
+    """Fuse sampling into the jitted steps so only (B,) int32 tokens ever
+    leave the device.
+
+    admit_fn(params, tokens, lengths[, rng]) -> (first_tokens, slot_cache)
+        packed admission: R right-padded prompts in one bucketed prefill;
+        each row's first output token is sampled from its own last prompt
+        position (lengths[r]-1) on device.
+    step_fn(params, token, cache, pos[, flush_page][, rng])
+        -> (next_token, pos+1, cache)
+        one decode step with sampling fused; token/pos stay device-resident
+        between steps — the per-token logits transfer and host argmax of
+        the old loop are gone.
+
+    Greedy (temperature<=0) takes no rng argument so its signature is
+    stable for AOT warmup; temperature sampling threads a per-call PRNG key
+    (host-split, so the stream is deterministic per step index).
+    """
+    greedy = sc.temperature <= 0.0
+
+    def pick(logits, rng):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / sc.temperature, axis=-1).astype(jnp.int32)
+
+    def admit_core(params, tokens, lengths, rng):
+        logits, slot_cache = prefill_fn(params, tokens, lengths)
+        rows = jnp.arange(tokens.shape[0])
+        return pick(logits[rows, lengths - 1], rng), slot_cache
+
+    if greedy:
+        def admit_fn(params, tokens, lengths):
+            return admit_core(params, tokens, lengths, None)
+
+        if paged:
+            def step_fn(params, token, cache, pos, flush_page):
+                logits, cache = decode_fn(params, token, cache, pos, flush_page)
+                return pick(logits, None), pos + 1, cache
+        else:
+            def step_fn(params, token, cache, pos):
+                logits, cache = decode_fn(params, token, cache, pos)
+                return pick(logits, None), pos + 1, cache
+    else:
+        def admit_fn(params, tokens, lengths, rng):
+            return admit_core(params, tokens, lengths, rng)
+
+        if paged:
+            def step_fn(params, token, cache, pos, flush_page, rng):
+                logits, cache = decode_fn(params, token, cache, pos, flush_page)
+                return pick(logits, rng), pos + 1, cache
+        else:
+            def step_fn(params, token, cache, pos, rng):
+                logits, cache = decode_fn(params, token, cache, pos)
+                return pick(logits, rng), pos + 1, cache
+
+    return admit_fn, step_fn
+
+
 # ---------------------------------------------------------------------------
 # Mesh placement: explicit NamedShardings for every serve step
 # ---------------------------------------------------------------------------
@@ -450,7 +529,9 @@ def serve_shardings(api: ModelAPI, params: Params, sc: ServeConfig,
         "params": sh.param_shardings(params, mesh, fsdp=False),
         "rep": ns(P()),
         # (B,) per-slot token/position vectors ride the slot-pool data axes
-        "vec": ns(sh.data_batch_spec(axes, 1, dim0=batch, mesh=mesh)),
+        # — including the fused step's sampled-token and pos+1 OUTPUTS, the
+        # only tensors the async loop ever reads back
+        "vec": sh.step_vec_sharding(mesh, batch),
         "pool": sh.cache_shardings(pool_shapes, cfg, mesh),
         "slot": sh.cache_shardings(slot_shapes, cfg, mesh),
         "tokens": ns(sh.data_batch_spec(axes, 2, dim0=batch, mesh=mesh)),
@@ -471,6 +552,25 @@ def cache_write_slot(cache, slot_cache, slot: jax.Array):
             c, s.astype(c.dtype), slot, axis=1),
         cache, slot_cache,
     )
+
+
+def cache_write_rows(cache, rows_cache, slots: jax.Array):
+    """Scatter an R-row packed-admission cache into slots `slots` of the
+    pool (any dense cache pytree, batch axis 1).  Rows the admission group
+    padded to a warmed row count carry out-of-range slot ids (>= B) and are
+    dropped — a padding row can land nowhere."""
+    return jax.tree.map(
+        lambda c, s: c.at[:, slots].set(s.astype(c.dtype), mode="drop"),
+        cache, rows_cache,
+    )
+
+
+def token_fix(token, pos, idx, tok_vals, pos_vals):
+    """Scatter admission/retirement corrections into the device-resident
+    (B,) token/pos state between decode steps.  `idx` is padded to a fixed
+    (B,) with out-of-range entries (dropped) so the fix compiles once."""
+    return (token.at[idx].set(tok_vals, mode="drop"),
+            pos.at[idx].set(pos_vals, mode="drop"))
 
 
 def cache_reset_slot(cache, slot: jax.Array):
@@ -497,14 +597,26 @@ class Engine:
     Slots are independent: each live request has its own position, so a
     retired slot is re-admitted immediately from the queue while its
     neighbours keep decoding — no request waits for the wave's slowest.
-    Admission prefills ONE request (prompt bucketed to a multiple of 8 to
-    bound jit retraces) and splices its cache into the free slot; live
-    slots are never re-prefilled.
+    Admission packs every free slot's request into ONE prefill call at a
+    fixed ladder bucket (prompts rounded up to AOT-compiled prompt-length
+    buckets — `pipeline.PrefillLadder`; `aot_warmup=True` compiles the
+    whole ladder at construction so nothing compiles under traffic) and
+    splices each row into its slot; live slots are never re-prefilled.
+
+    Sampling is fused into the jitted prefill/decode steps, so only the
+    `(B,)` sampled-token vector ever crosses to the host; `token`/`pos`
+    stay device-resident between steps. With `async_host=True` the loop
+    runs one step deep — step t+1 is dispatched before step t's tokens are
+    read — and bookkeeping (token appends, latency, page returns) drains
+    on a background thread. Greedy outputs are bitwise the synchronous
+    serial loop's (tests/test_serve_pipeline.py).
 
     Sampling order is explicit: the first output token is sampled from the
     prefill logits at the prompt's last position; a decode step only runs
     while some slot still needs tokens (a request whose max_new is 1
-    finishes at admission without a decode step).
+    finishes at admission without a decode step). `stats` splits wall time
+    into warmup_s / prefill_s / decode_s / host_s; `latency_stats()`
+    reports p50/p99 TTFT and inter-token latency.
 
     `scheduler="static"` restores wave-at-a-time lock-step batching
     (right-aligned prompts, one scalar position) — the baseline the
@@ -533,83 +645,99 @@ class Engine:
             self._free_pages = list(range(self._n_pages))
             self._slot_pages: list[list[int]] = [[] for _ in range(batch)]
         self._cache_init_raw = cache_init  # un-jitted: pool accounting
-        if sc.mesh is None:
+        self.trace_counts = pl.TraceCounts()
+        tc = self.trace_counts
+        if self.scheduler == "continuous":
+            # fused-sampling steps: only (B,) int32 tokens cross to the host
+            self.ladder = pl.PrefillLadder.build(sc.max_seq, sc.prefill_buckets)
+            admit_fn, step_fn = make_fused_steps(prefill_fn, decode_fn, sc,
+                                                 paged=self.paged)
+            admit_fn = pl.counting("prefill", tc, admit_fn)
+            step_fn = pl.counting("decode", tc, step_fn)
+            write_fn = pl.counting(
+                "write", tc,
+                kvc.paged_write_rows if self.paged else cache_write_rows)
+            reset_fn = pl.counting(
+                "reset", tc,
+                kvc.paged_reset_slot if self.paged else cache_reset_slot)
+            fix_fn = pl.counting("fix", tc, token_fix)
+            if sc.mesh is None:
+                self._admit_step = jax.jit(admit_fn)
+                self._decode = jax.jit(step_fn)
+                self._cache_init = cache_init
+                self._write = jax.jit(write_fn)
+                self._reset = jax.jit(reset_fn)
+                self._fix = jax.jit(fix_fn)
+            else:
+                shd = serve_shardings(api, params, sc, batch, cache_init)
+                # place params once; the decode jit pins the same shardings,
+                # so no per-call retransfer
+                params = jax.device_put(params, shd["params"])
+                dec_in = [shd["params"], shd["vec"], shd["pool"], shd["vec"]]
+                if self.paged:
+                    dec_in.append(shd["vec"])
+                if sc.temperature > 0.0:
+                    dec_in.append(shd["rep"])
+                self._decode = jax.jit(
+                    step_fn, in_shardings=tuple(dec_in),
+                    out_shardings=(shd["vec"], shd["vec"], shd["pool"]),
+                )
+                # admission tensors are bucket-shaped (rows x bucket varies
+                # across the warmed ladder), so the admit step rides
+                # placement propagation off the committed params; the
+                # splice/reset/fix jits pin the pool and (B,) state
+                self._admit_step = jax.jit(admit_fn)
+                pool_init = jax.jit(
+                    pl.counting("cache_init", tc, lambda: cache_init(batch)),
+                    out_shardings=shd["pool"])
+                self._cache_init = lambda b: pool_init()
+                self._write = jax.jit(write_fn, out_shardings=shd["pool"])
+                self._reset = jax.jit(reset_fn, out_shardings=shd["pool"])
+                self._fix = jax.jit(
+                    fix_fn,
+                    in_shardings=(shd["vec"], shd["vec"], shd["rep"],
+                                  shd["rep"], shd["rep"]),
+                    out_shardings=(shd["vec"], shd["vec"]),
+                )
+        elif sc.mesh is None:
             self._prefill = jax.jit(prefill_fn)
             self._decode = jax.jit(decode_fn)
             self._cache_init = cache_init
-            if self.paged:
-                self._write = jax.jit(kvc.paged_write_slot)
-                self._reset = jax.jit(kvc.paged_reset_slot)
-            else:
-                self._write = jax.jit(cache_write_slot)
-                self._reset = jax.jit(cache_reset_slot)
-        elif self.paged:
-            # paged + mesh: pin the decode hot loop (params / pool / (B,)
-            # vectors) with explicit shardings; admission ops are per-request
-            # and bucket-shaped, so they jit with the pool OUTPUT pinned and
-            # inputs left to placement propagation (batch-1 tensors are tiny)
+        else:
             shd = serve_shardings(api, params, sc, batch, cache_init)
             params = jax.device_put(params, shd["params"])
+            # lock-step wave: the full (B, S) prompt block is data-sharded
+            # and decode runs on one scalar (replicated) position
             self._decode = jax.jit(
                 decode_fn,
                 in_shardings=(shd["params"], shd["vec"], shd["pool"],
-                              shd["vec"], shd["vec"]),
+                              shd["rep"]),
                 out_shardings=(shd["logits_decode"], shd["pool"]),
             )
-            self._prefill = jax.jit(prefill_fn)
+            self._prefill = jax.jit(
+                prefill_fn,
+                in_shardings=(shd["params"], shd["tokens"]),
+                out_shardings=(shd["logits_prefill"], shd["pool"]),
+            )
             pool_init = jax.jit(lambda: cache_init(batch),
                                 out_shardings=shd["pool"])
             self._cache_init = lambda b: pool_init()
-            self._write = jax.jit(kvc.paged_write_slot,
-                                  out_shardings=shd["pool"])
-            self._reset = jax.jit(kvc.paged_reset_slot,
-                                  out_shardings=shd["pool"])
-        else:
-            shd = serve_shardings(api, params, sc, batch, cache_init)
-            # place params once; the jits below pin the same shardings, so no
-            # per-call retransfer (and a launcher device_put is a no-op)
-            params = jax.device_put(params, shd["params"])
-            # static waves drive decode with one scalar position; continuous
-            # threads the per-slot (B,) vector on the data axes
-            pos_sh = shd["vec"] if self.scheduler == "continuous" else shd["rep"]
-            self._decode = jax.jit(
-                decode_fn,
-                in_shardings=(shd["params"], shd["vec"], shd["pool"], pos_sh),
-                out_shardings=(shd["logits_decode"], shd["pool"]),
-            )
-            if self.scheduler == "continuous":
-                # admission: one request (batch 1, replicated) -> slot cache
-                self._prefill = jax.jit(
-                    prefill_fn,
-                    in_shardings=(shd["params"], shd["rep"], shd["rep"]),
-                    out_shardings=(shd["logits_admit"], shd["slot"]),
-                )
-            else:
-                # lock-step wave: the full (B, S) prompt block is data-sharded
-                self._prefill = jax.jit(
-                    prefill_fn,
-                    in_shardings=(shd["params"], shd["tokens"]),
-                    out_shardings=(shd["logits_prefill"], shd["pool"]),
-                )
-            pool_init = jax.jit(lambda: cache_init(batch),
-                                out_shardings=shd["pool"])
-            self._cache_init = lambda b: pool_init()
-            self._write = jax.jit(
-                cache_write_slot,
-                in_shardings=(shd["pool"], shd["slot"], shd["rep"]),
-                out_shardings=shd["pool"],
-            )
-            self._reset = jax.jit(
-                cache_reset_slot,
-                in_shardings=(shd["pool"], shd["rep"]),
-                out_shardings=shd["pool"],
-            )
         self.params = params
         self.stats = {"requests": 0, "tokens_out": 0, "steps": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_s": 0.0, "decode_s": 0.0, "host_s": 0.0,
+                      "warmup_s": 0.0,
                       "slot_steps_live": 0, "slot_steps_total": 0,
                       "peak_live_slots": 0, "admit_blocked_on_pages": 0,
                       "peak_pages_in_use": 0}
+        self._lat = {"ttft_s": [], "itl_s": []}
+        self._staged = []
+        self._worker = None
+        self._t_gen0 = 0.0
+        if sc.aot_warmup and self.scheduler == "continuous":
+            ctx = mesh_lib.use_mesh(sc.mesh) if sc.mesh is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                self.stats["warmup_s"] += pl.warmup_engine(self)
 
     # ------------------------------------------------------------------ util
     def _sample(self, logits: jax.Array) -> jax.Array:
@@ -621,6 +749,20 @@ class Engine:
     def slot_utilization(self) -> float:
         """Fraction of decode slot-steps spent on live requests."""
         return self.stats["slot_steps_live"] / max(self.stats["slot_steps_total"], 1)
+
+    def latency_stats(self) -> dict:
+        """p50/p99 TTFT and inter-token latency (seconds) over everything
+        this engine has served.  TTFT = generate() entry to the request's
+        first token leaving the device (admission queueing included); ITL =
+        gap between a slot's consecutive token emissions on the host clock
+        (pipeline bubbles included).  Zeros when nothing was served."""
+        out = {}
+        for key, name in (("ttft_s", "ttft"), ("itl_s", "itl")):
+            vals = self._lat[key]
+            for q in (50, 99):
+                out[f"{name}_p{q}_s"] = \
+                    float(np.percentile(vals, q)) if vals else 0.0
+        return out
 
     def kv_pool_stats(self) -> dict:
         """Analytic footprint of this engine's KV pool: total bytes and the
@@ -657,6 +799,8 @@ class Engine:
         out_tokens/done fields fill in as slots retire).
         """
         queue = list(requests)
+        self._t_gen0 = time.perf_counter()
+        d0, p0 = self.stats["decode_s"], self.stats["prefill_s"]
         # the ambient mesh context activates the model-internal shard hints
         # (sharding.logical / attn_hint) while the jits' explicit in/out
         # NamedShardings pin the step boundaries
@@ -668,6 +812,12 @@ class Engine:
                     self._run_wave(queue[w0:w0 + self.batch])
             else:
                 self._run_continuous(queue)
+                # honest attribution: whatever this call's wall time was not
+                # spent dispatching/waiting on the device is host overhead
+                wall = time.perf_counter() - self._t_gen0
+                self.stats["host_s"] += wall \
+                    - (self.stats["decode_s"] - d0) \
+                    - (self.stats["prefill_s"] - p0)
         self.stats["requests"] += len(queue)
         return queue
 
@@ -688,133 +838,280 @@ class Engine:
         self._slot_pages[slot] = []
 
     def _admit(self, r: Request, cache, slot: int):
-        """Prefill one request (batch=1) and splice it into `slot`."""
+        """Stage one request into `slot` (pages already reserved): bucket
+        its prompt on the AOT ladder and queue the row for the admission
+        group's single prefill call (`_flush_admissions`).  An off-ladder
+        prompt raises here — admission never compiles a fresh bucket under
+        traffic — and the scheduler rolls the page reservation back."""
         plen = len(r.prompt)
-        bucket = max(kvc.BLOCK, -(-plen // kvc.BLOCK) * kvc.BLOCK)
-        if bucket > self.sc.max_seq:
-            raise ValueError(
-                f"prompt of {plen} tokens needs a {bucket}-token bucket "
-                f"> max_seq={self.sc.max_seq}")
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :plen] = r.prompt
-        logits, slot_cache = self._prefill(
-            self.params, jnp.asarray(padded), jnp.asarray([plen], jnp.int32))
+        self._staged.append((r, slot, plen, self.ladder.bucket_for(plen)))
+        return cache
+
+    def _flush_admissions(self, cache):
+        """Run the staged admission group: ONE prefill call at the group's
+        widest ladder bucket (rows padded to a warmed row count), one
+        batched splice into the slots/pages, first tokens sampled on device
+        at each row's own last prompt position."""
+        if not self._staged:
+            return cache
+        staged, self._staged = self._staged, []
+        t0 = time.perf_counter()
+        bucket = max(b for (_, _, _, b) in staged)
+        rows = self.ladder.pad_rows(len(staged), self.batch)
+        tokens = np.zeros((rows, bucket), np.int32)
+        lengths = np.full(rows, bucket, np.int32)
+        slot_ids = np.full(rows, self.batch, np.int32)  # padding rows drop
+        for j, (r, slot, plen, _) in enumerate(staged):
+            tokens[j, :plen] = r.prompt
+            lengths[j] = plen
+            slot_ids[j] = slot
+        args = [self.params, jnp.asarray(tokens), jnp.asarray(lengths)]
+        if self.sc.temperature > 0.0:
+            self.rng, sub = jax.random.split(self.rng)
+            args.append(sub)
+        first, rows_cache = self._admit_step(*args)
         if self.paged:
-            # splice through the block table: the prompt's full blocks land
-            # in the slot's reserved pages; padding blocks of the bucket are
-            # dropped (out-of-range page id); the partial block stays in the
-            # tail ring. Nothing max_seq-sized is written.
-            prompt_blocks = plen // kvc.BLOCK
-            pages = self._slot_pages[slot]
-            page_ids = np.full(bucket // kvc.BLOCK, self._n_pages, np.int32)
-            page_ids[:prompt_blocks] = pages[:prompt_blocks]
-            row = np.zeros(self.sc.max_seq // kvc.BLOCK, np.int32)
-            row[:prompt_blocks] = pages[:prompt_blocks]
-            cache = self._write(cache, slot_cache, jnp.int32(slot),
-                                jnp.asarray(page_ids), jnp.asarray(row))
+            # splice through the block table: each row's full prompt blocks
+            # land in its slot's reserved pages; bucket padding blocks (and
+            # whole padding rows) carry out-of-range ids the device scatter
+            # drops. Nothing max_seq-sized is written.
+            page_ids = np.full((rows, bucket // kvc.BLOCK), self._n_pages,
+                               np.int32)
+            table = np.zeros((rows, self.sc.max_seq // kvc.BLOCK), np.int32)
+            for j, (r, slot, plen, _) in enumerate(staged):
+                pb = plen // kvc.BLOCK
+                pages = self._slot_pages[slot]
+                page_ids[j, :pb] = pages[:pb]
+                table[j, :pb] = pages[:pb]
+            cache = self._write(cache, rows_cache, jnp.asarray(slot_ids),
+                                jnp.asarray(page_ids), jnp.asarray(table))
         else:
-            cache = self._write(cache, slot_cache, jnp.int32(slot))
-        first = int(np.asarray(self._sample(logits[:, plen - 1]))[0])
-        return first, cache
+            cache = self._write(cache, rows_cache, jnp.asarray(slot_ids))
+        firsts = np.asarray(first)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        t_emit = time.perf_counter()
+        fix_i, fix_t, fix_p = [], [], []
+        for j, (r, slot, plen, _) in enumerate(staged):
+            tok = int(firsts[j])
+            self.stats["tokens_out"] += 1
+            finished = tok == self.sc.eos_id or r.max_new <= 1 \
+                or plen >= self.sc.max_seq
+            pages = None
+            if finished:  # finished at admission — no decode step
+                cache = self._reset(cache, jnp.int32(slot))
+                if self.paged:
+                    pages, self._slot_pages[slot] = self._slot_pages[slot], []
+            else:
+                self._slots[slot] = r
+                self._pos[slot] = plen
+                self._nout[slot] = 1
+                fix_i.append(slot)
+                fix_t.append(tok)
+                fix_p.append(plen)
+            self._worker.submit(functools.partial(
+                self._bk_first, r, tok, t_emit - self._t_gen0, finished,
+                pages, slot, t_emit))
+        if fix_i:
+            self._apply_fix(fix_i, fix_t, fix_p)
+        return cache
+
+    def _bk_first(self, r, tok, ttft, finished, pages, slot, t_emit):
+        """Background bookkeeping for an admitted request's first token."""
+        r.out_tokens.append(tok)
+        self._lat["ttft_s"].append(ttft)
+        self._last_emit[slot] = t_emit
+        if finished:
+            r.done = True
+            if pages:
+                self._free_pages.extend(pages)
+
+    def _bk_step(self, emitted, retired, t_emit):
+        """Background bookkeeping for one processed decode step: token
+        appends + inter-token latency, then retirements (done flags and
+        page returns, in slot order — the free-list sequence matches the
+        synchronous loop's)."""
+        for r, tok, slot in emitted:
+            r.out_tokens.append(tok)
+            self._lat["itl_s"].append(t_emit - self._last_emit[slot])
+            self._last_emit[slot] = t_emit
+        for r, pages in retired:
+            r.done = True
+            if pages:
+                self._free_pages.extend(pages)
+
+    def _apply_fix(self, idx, tok_vals, pos_vals):
+        """Scatter admission/retirement corrections into the device-resident
+        token/pos vectors (padded to one fixed (B,) shape)."""
+        b = self.batch
+        ii = np.full(b, b, np.int32)
+        tv = np.zeros(b, np.int32)
+        pv = np.zeros(b, np.int32)
+        ii[:len(idx)] = idx
+        tv[:len(idx)] = tok_vals
+        pv[:len(idx)] = pos_vals
+        self._tok_dev, self._pos_dev = self._fix(
+            self._tok_dev, self._pos_dev, jnp.asarray(ii), jnp.asarray(tv),
+            jnp.asarray(pv))
+        self._devpos[np.asarray(idx, np.int64)] = pos_vals
+
+    def _admit_free_slots(self, queue, cache):
+        """Fill free slots from the queue (paged pools additionally gate on
+        free pages, FCFS) and flush the staged group through one packed
+        prefill (`packed_admission=False` caps the group at 1 — the serial
+        baseline)."""
+        group_cap = self.batch if self.sc.packed_admission else 1
+        if self.paged and self._qi < len(queue) \
+                and any(s is None for s in self._slots):
+            # deterministic allocator: apply every pending retirement's page
+            # return before reserving, so the free-list sequence (and thus
+            # every page id ever issued) matches the synchronous loop
+            self._worker.flush()
+        for i in range(self.batch):
+            if self._slots[i] is not None or self._qi >= len(queue):
+                continue
+            r = queue[self._qi]
+            if self.paged:
+                need = self._pages_needed(r)
+                if need > self._n_pages:
+                    raise ValueError(
+                        f"request {r.uid} needs {need} pages > pool of "
+                        f"{self._n_pages} (raise pool_pages/page_budget_mb"
+                        " or lower max_new)")
+                if need > len(self._free_pages):
+                    # blocked on pages, not slots: keep decoding; the next
+                    # retirement frees pages and re-tries (FCFS, so later
+                    # small requests don't starve this one)
+                    self.stats["admit_blocked_on_pages"] += 1
+                    break
+                self._slot_pages[i] = [self._free_pages.pop()
+                                       for _ in range(need)]
+                used = self._n_pages - len(self._free_pages)
+                self.stats["peak_pages_in_use"] = max(
+                    self.stats["peak_pages_in_use"], used)
+            self._qi += 1
+            try:
+                cache = self._admit(r, cache, i)
+            except Exception:
+                if self.paged:
+                    # admission failed (e.g. off-ladder prompt): no staged
+                    # reservation may leak out of the pool
+                    self._release_pages(i)
+                    for (_, s, _, _) in self._staged:
+                        self._release_pages(s)
+                self._staged = []
+                raise
+            if len(self._staged) >= group_cap:
+                cache = self._flush_admissions(cache)
+        return self._flush_admissions(cache)
+
+    def _dispatch(self, cache, live):
+        """Issue one fused decode step; token/pos stay on device."""
+        t0 = time.perf_counter()
+        args = [self.params, self._tok_dev, cache, self._pos_dev]
+        if self.paged:
+            # hand each flushing row its reserved page; every other row gets
+            # an out-of-range id the device scatter drops. `_devpos` mirrors
+            # the DEVICE position (which advances on speculative steps the
+            # host hasn't processed yet); the length guard drops the flush
+            # of a row whose retirement is already in flight.
+            fp = np.full(self.batch, self._n_pages, np.int32)
+            for i in live:
+                p = int(self._devpos[i])
+                if p % kvc.BLOCK == kvc.BLOCK - 1 \
+                        and p // kvc.BLOCK < len(self._slot_pages[i]):
+                    fp[i] = self._slot_pages[i][p // kvc.BLOCK]
+            args.append(jnp.asarray(fp))
+        if self.sc.temperature > 0.0:
+            self.rng, sub = jax.random.split(self.rng)
+            args.append(sub)
+        tok, pos1, cache = self._decode(*args)
+        self._tok_dev, self._pos_dev = tok, pos1
+        self._devpos += 1
+        self.stats["steps"] += 1
+        self.stats["slot_steps_total"] += self.batch
+        self.stats["slot_steps_live"] += len(live)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        return cache, tok
+
+    def _process(self, fut, plive, cache):
+        """Read one completed step's tokens and apply its bookkeeping.
+
+        `plive` is the (slot, request) snapshot at dispatch time; a slot
+        retired (or re-admitted) while the step was in flight is skipped —
+        the speculative step only ever touched that slot's own planes, all
+        overwritten at the next admission."""
+        t0 = time.perf_counter()
+        toks = np.asarray(fut)  # the only device->host sync of the loop
+        self.stats["decode_s"] += time.perf_counter() - t0
+        t_emit = time.perf_counter()
+        emitted, retired, fix_i = [], [], []
+        for i, r in plive:
+            if self._slots[i] is not r:
+                continue
+            tok = int(toks[i])
+            self._nout[i] += 1
+            self._pos[i] += 1
+            self.stats["tokens_out"] += 1
+            emitted.append((r, tok, i))
+            if tok == self.sc.eos_id or self._nout[i] >= r.max_new \
+                    or self._pos[i] >= self.sc.max_seq:
+                self._slots[i] = None  # retire; slot re-admits next round
+                self._pos[i] = 0
+                self._nout[i] = 0
+                cache = self._reset(cache, jnp.int32(i))
+                pages = None
+                if self.paged:
+                    pages, self._slot_pages[i] = self._slot_pages[i], []
+                retired.append((r, pages))
+                fix_i.append(i)
+        if emitted:
+            self._worker.submit(functools.partial(
+                self._bk_step, emitted, retired, t_emit))
+        if fix_i:
+            self._apply_fix(fix_i, [0] * len(fix_i), [0] * len(fix_i))
+        return cache
 
     def _run_continuous(self, queue: list[Request]) -> None:
-        slots: list[Request | None] = [None] * self.batch
-        pos = np.zeros(self.batch, np.int32)
-        token = np.zeros(self.batch, np.int32)
-        cache = self._cache_init(self.batch)
-        qi = 0
-        while True:
-            # ---- admission: fill free slots from the queue (paged pools
-            # additionally gate on free pages, FCFS) ----------------------
-            for i in range(self.batch):
-                if slots[i] is not None or qi >= len(queue):
-                    continue
-                r = queue[qi]
-                if self.paged:
-                    need = self._pages_needed(r)
-                    if need > self._n_pages:
-                        raise ValueError(
-                            f"request {r.uid} needs {need} pages > pool of "
-                            f"{self._n_pages} (raise pool_pages/page_budget_mb"
-                            " or lower max_new)")
-                    if need > len(self._free_pages):
-                        # blocked on pages, not slots: keep decoding; the
-                        # next retirement frees pages and re-tries (FCFS, so
-                        # later small requests don't starve this one)
-                        self.stats["admit_blocked_on_pages"] += 1
+        b = self.batch
+        self._slots: list[Request | None] = [None] * b
+        self._pos = np.zeros(b, np.int64)      # logical per-slot position
+        self._nout = np.zeros(b, np.int64)     # tokens emitted per slot
+        self._devpos = np.zeros(b, np.int64)   # device pos mirror (see _dispatch)
+        self._last_emit = np.zeros(b)
+        self._tok_dev = jnp.zeros((b,), jnp.int32)
+        self._pos_dev = jnp.zeros((b,), jnp.int32)
+        self._staged = []
+        self._qi = 0
+        cache = self._cache_init(b)
+        # async_host: run one step deep — dispatch step t+1 before reading
+        # step t's tokens, so the device never idles on host bookkeeping.
+        # Slot independence makes the speculation safe: a step dispatched
+        # for a slot that retires under it only writes that slot's own
+        # tail/table/pages, all reset or overwritten before anything reads
+        # them, and its token is discarded in _process.
+        depth = 1 if self.sc.async_host else 0
+        pending: collections.deque = collections.deque()
+        self._worker = pl.BackgroundWorker()
+        try:
+            while True:
+                cache = self._admit_free_slots(queue, cache)
+                live = [(i, r) for i, r in enumerate(self._slots)
+                        if r is not None]
+                if not live and not pending:
+                    if self._qi >= len(queue):
                         break
-                    self._slot_pages[i] = [self._free_pages.pop()
-                                           for _ in range(need)]
-                    used = self._n_pages - len(self._free_pages)
-                    self.stats["peak_pages_in_use"] = max(
-                        self.stats["peak_pages_in_use"], used)
-                qi += 1
-                t0 = time.perf_counter()
-                try:
-                    first, cache = self._admit(r, cache, i)
-                except Exception:
-                    if self.paged:
-                        # admission failed (e.g. prompt bucket > max_seq):
-                        # the reservation must not leak out of the pool
-                        self._release_pages(i)
-                    raise
-                self.stats["prefill_s"] += time.perf_counter() - t0
-                r.out_tokens.append(first)
-                self.stats["tokens_out"] += 1
-                plen = len(r.prompt)
-                if first == self.sc.eos_id or len(r.out_tokens) >= r.max_new \
-                        or plen >= self.sc.max_seq:
-                    r.done = True  # finished at admission — no decode step
-                    cache = self._reset(cache, jnp.int32(i))
-                    if self.paged:
-                        self._release_pages(i)
-                else:
-                    slots[i] = r
-                    pos[i] = plen
-                    token[i] = first
-            live = [i for i in range(self.batch) if slots[i] is not None]
-            if not live:
-                if qi >= len(queue):
-                    return
-                continue  # everything retired at admission; admit more
-            self.stats["peak_live_slots"] = max(
-                self.stats["peak_live_slots"], len(live))
-            # ---- one decode step over the pool, per-slot positions -------
-            t0 = time.perf_counter()
-            if self.paged:
-                # hand each flushing row its reserved page; every other row
-                # gets an out-of-range id the device scatter drops
-                fp = np.full(self.batch, self._n_pages, np.int32)
-                for i in live:
-                    if pos[i] % kvc.BLOCK == kvc.BLOCK - 1:
-                        fp[i] = self._slot_pages[i][pos[i] // kvc.BLOCK]
-                logits, cache = self._decode(self.params, jnp.asarray(token),
-                                             cache, jnp.asarray(pos),
-                                             jnp.asarray(fp))
-            else:
-                logits, cache = self._decode(self.params, jnp.asarray(token),
-                                             cache, jnp.asarray(pos))
-            nxt = np.asarray(self._sample(logits))
-            self.stats["decode_s"] += time.perf_counter() - t0
-            self.stats["steps"] += 1
-            self.stats["slot_steps_total"] += self.batch
-            self.stats["slot_steps_live"] += len(live)
-            for i in live:
-                r = slots[i]
-                tok = int(nxt[i])
-                r.out_tokens.append(tok)
-                self.stats["tokens_out"] += 1
-                pos[i] += 1
-                token[i] = tok
-                if tok == self.sc.eos_id or len(r.out_tokens) >= r.max_new \
-                        or pos[i] >= self.sc.max_seq:
-                    r.done = True
-                    slots[i] = None  # retire; slot re-admits next iteration
-                    pos[i] = 0
-                    token[i] = 0
-                    cache = self._reset(cache, jnp.int32(i))
-                    if self.paged:
-                        self._release_pages(i)
+                    continue  # everything retired at admission; admit more
+                if live:
+                    self.stats["peak_live_slots"] = max(
+                        self.stats["peak_live_slots"], len(live))
+                    cache, fut = self._dispatch(cache, [i for i, _ in live])
+                    pending.append((fut, live))
+                if len(pending) > depth or (pending and not live):
+                    fut, plive = pending.popleft()
+                    cache = self._process(fut, plive, cache)
+        finally:
+            worker, self._worker = self._worker, None
+            worker.close()
 
     # ----------------------------------------------------- static scheduler
     def _run_wave(self, wave: list[Request]) -> None:

@@ -1,0 +1,243 @@
+"""The device-continuous serving pipeline: AOT-warmed prefill buckets,
+packed admission, and the async host loop (serve/pipeline.py + Engine).
+
+Pins the PR's acceptance criteria:
+  * packed multi-prompt admission produces bitwise-identical greedy tokens
+    and identical page-allocation accounting to one-at-a-time admission
+    (dense + paged, single-device + forced-4-host-device mesh);
+  * the one-step-deep async loop is bitwise the synchronous loop;
+  * after warmup, an on-ladder workload triggers ZERO new jit traces, and
+    an off-ladder prompt raises explicitly instead of silently compiling;
+  * Engine.stats attributes warmup / device / host time separately and
+    latency_stats() reports p50/p99 TTFT and inter-token latency.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import api as model_api
+from repro.serve import engine as E
+from repro.serve import pipeline as pl
+
+PLENS = [5, 9, 12, 16, 3, 21, 8, 14]
+MAX_NEWS = [3, 7, 5, 9, 4, 6, 8, 5]
+
+
+@pytest.fixture(scope="module")
+def lm():
+    api = model_api.build_reduced("yi_6b")
+    params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    return api, params
+
+
+def _requests(n=8, seed=42):
+    rng = np.random.default_rng(seed)
+    return [E.Request(uid=i,
+                      prompt=rng.integers(0, 200, PLENS[i]).astype(np.int32),
+                      max_new=MAX_NEWS[i]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Ladder + worker units (no model)
+# ---------------------------------------------------------------------------
+
+def test_auto_ladder_and_bucketing():
+    assert pl.auto_buckets(48) == (8, 16, 32, 48)
+    assert pl.auto_buckets(64) == (8, 16, 32, 64)
+    lad = pl.PrefillLadder.build(64)
+    assert lad.bucket_for(3) == 8
+    assert lad.bucket_for(16) == 16
+    assert lad.bucket_for(17) == 32
+    with pytest.raises(ValueError, match="bucket"):
+        lad.bucket_for(65)
+    # explicit ladders narrow the compile surface; validation is strict
+    lad2 = pl.PrefillLadder.build(64, buckets=(16, 48))
+    assert lad2.bucket_for(20) == 48
+    with pytest.raises(ValueError, match="bucket"):
+        lad2.bucket_for(49)
+    with pytest.raises(ValueError, match="multiple"):
+        pl.PrefillLadder.build(64, buckets=(12,))
+    with pytest.raises(ValueError, match="max_seq"):
+        pl.PrefillLadder.build(64, buckets=(128,))
+    # admission row counts: powers of two plus the full batch
+    assert lad.row_counts(4) == (1, 2, 4)
+    assert lad.row_counts(6) == (1, 2, 4, 6)
+    assert lad.pad_rows(3, 4) == 4
+    assert lad.pad_rows(5, 6) == 6
+
+
+def test_background_worker_order_and_error_propagation():
+    w = pl.BackgroundWorker()
+    out = []
+    for i in range(200):
+        w.submit(functools.partial(out.append, i))
+    w.flush()
+    assert out == list(range(200))  # strict submission order
+    w.submit(lambda: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        w.flush()  # a bookkeeping bug fails the serve thread, not silence
+    w.submit(out.clear)
+    w.close()
+    assert out == []
+
+
+# ---------------------------------------------------------------------------
+# Zero compilation under traffic (the AOT warmup contract)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def warm(lm):
+    """One warmed engine + its post-warmup trace snapshot (max_seq=16 keeps
+    the ladder at 2 buckets x 2 row counts)."""
+    api, params = lm
+    sc = E.ServeConfig(max_seq=16, kv_compress=True, kv_keep=8,
+                       codec_backend="reference", aot_warmup=True)
+    eng = E.Engine(api, params, sc, batch=2)
+    return eng, eng.trace_counts.snapshot()
+
+
+def test_warmup_compiles_the_whole_ladder(warm):
+    eng, snap = warm
+    assert eng.stats["warmup_s"] > 0.0
+    assert eng.ladder.buckets == (8, 16)
+    # every (rows x bucket) admission shape compiled ahead of traffic
+    assert snap["prefill"] == len(eng.ladder.buckets) * \
+        len(eng.ladder.row_counts(eng.batch))
+    assert snap["decode"] == 1 and snap["fix"] == 1 and snap["reset"] == 1
+
+
+def test_zero_new_traces_for_on_ladder_traffic(warm):
+    eng, snap = warm
+    rng = np.random.default_rng(1)
+    reqs = [E.Request(uid=i, prompt=rng.integers(0, 200, p).astype(np.int32),
+                      max_new=3) for i, p in enumerate([5, 9, 14, 16, 3])]
+    done = eng.generate(reqs)
+    assert all(r.done for r in done)
+    assert eng.stats["steps"] > 0
+    assert eng.trace_counts.delta(snap) == {}  # nothing compiled under traffic
+
+
+def test_stats_split_and_latency_metrics(warm):
+    eng, _ = warm
+    s = eng.stats
+    assert s["warmup_s"] > 0 and s["prefill_s"] > 0 and s["decode_s"] > 0
+    assert s["host_s"] >= 0.0  # bookkeeping no longer hides inside decode_s
+    lat = eng.latency_stats()
+    assert set(lat) == {"ttft_p50_s", "ttft_p99_s", "itl_p50_s", "itl_p99_s"}
+    assert lat["ttft_p50_s"] > 0 and lat["itl_p50_s"] > 0
+    assert lat["ttft_p99_s"] >= lat["ttft_p50_s"]
+    assert lat["itl_p99_s"] >= lat["itl_p50_s"]
+
+
+def test_off_ladder_prompt_raises_instead_of_compiling(lm):
+    api, params = lm
+    sc = E.ServeConfig(max_seq=64, kv_compress=True, kv_keep=8,
+                       codec_backend="reference", prefill_buckets=(8, 16))
+    eng = E.Engine(api, params, sc, batch=2)
+    with pytest.raises(ValueError, match="bucket"):
+        eng.generate([E.Request(uid=0, prompt=np.zeros(20, np.int32),
+                                max_new=2)])
+
+
+# ---------------------------------------------------------------------------
+# Packed admission + async loop: bitwise parity with the serial/sync path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_packed_admission_parity_dense(lm):
+    """A mixed-length workload admitted via packed multi-prompt prefill is
+    bitwise the serial one-at-a-time loop (which is the pre-pipeline
+    engine), greedy, dense pool."""
+    api, params = lm
+    kw = dict(max_seq=64, kv_compress=True, kv_keep=8,
+              codec_backend="reference")
+    packed = E.Engine(api, params, E.ServeConfig(**kw), batch=4)
+    serial = E.Engine(api, params,
+                      E.ServeConfig(**kw, packed_admission=False,
+                                    async_host=False), batch=4)
+    a = packed.generate(_requests())
+    b = serial.generate(_requests())
+    assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+    assert packed.stats["tokens_out"] == serial.stats["tokens_out"]
+
+
+@pytest.mark.slow
+def test_packed_admission_parity_paged_page_accounting(lm):
+    """Paged pool: packed admission must issue the SAME page ids to the
+    same slots in the same order as serial admission (the allocator is
+    deterministic), produce bitwise tokens, and drain the pool fully.
+
+    Page-id order is compared at matched pipeline depth: the one-step-deep
+    async loop admits a freed slot one decode step later than the sync
+    loop (the speculative step is already in flight), which can reorder
+    page RECYCLING without affecting tokens — so the packed-vs-serial
+    comparison holds async fixed, and the sync engine pins tokens only."""
+    api, params = lm
+    kw = dict(max_seq=64, kv_compress=True, kv_keep=8,
+              codec_backend="reference", pool_pages=24)
+
+    def run(**over):
+        eng = E.Engine(api, params, E.ServeConfig(**kw, **over), batch=4)
+        issued = []
+        inner = eng._admit
+
+        def spy(r, c, i):
+            issued.append((r.uid, i, tuple(eng._slot_pages[i])))
+            return inner(r, c, i)
+
+        eng._admit = spy
+        done = eng.generate(_requests())
+        assert sorted(eng._free_pages) == list(range(24))  # fully drained
+        return ([r.out_tokens for r in done], issued,
+                eng.stats["peak_pages_in_use"])
+
+    toks_sync, _, _ = run(packed_admission=False, async_host=False)
+    toks_serial, issued_serial, peak_serial = run(packed_admission=False)
+    toks_packed, issued_packed, peak_packed = run()
+    assert toks_packed == toks_serial == toks_sync  # bitwise, all modes
+    assert issued_packed == issued_serial  # same pages, same slots, same order
+    assert peak_packed == peak_serial
+
+
+@pytest.mark.slow
+def test_async_pipeline_matches_sync_loop(lm):
+    """One-step-deep dispatch (read step t while t+1 runs) changes wall
+    time only: per-request greedy tokens are bitwise the synchronous
+    loop's, through retirement and slot reuse."""
+    api, params = lm
+    kw = dict(max_seq=64, kv_compress=True, kv_keep=8,
+              codec_backend="reference")
+    a = E.Engine(api, params, E.ServeConfig(**kw), batch=3) \
+        .generate(_requests())
+    b = E.Engine(api, params, E.ServeConfig(**kw, async_host=False),
+                 batch=3).generate(_requests())
+    assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+@pytest.mark.parametrize("pool", [None, 24], ids=["dense", "paged"])
+def test_packed_admission_parity_on_mesh(lm, pool):
+    """Packed admission + async pipeline on a 4x1 mesh == the serial sync
+    single-device engine, dense and paged."""
+    from repro.parallel import mesh as mesh_lib
+
+    api, params = lm
+    kw = dict(max_seq=64, kv_compress=True, kv_keep=8,
+              codec_backend="reference", pool_pages=pool)
+    base = E.Engine(api, params,
+                    E.ServeConfig(**kw, packed_admission=False,
+                                  async_host=False), batch=4) \
+        .generate(_requests())
+    eng = E.Engine(api, params,
+                   E.ServeConfig(**kw,
+                                 mesh=mesh_lib.make_serve_mesh("4x1")),
+                   batch=4)
+    got = eng.generate(_requests())
+    assert [r.out_tokens for r in got] == [r.out_tokens for r in base]
+    if pool:
+        assert sorted(eng._free_pages) == list(range(pool))

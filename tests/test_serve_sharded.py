@@ -200,8 +200,8 @@ def test_decode_io_shardings_are_explicit(lm):
     eng = E.Engine(api, params, sc, batch=4)
     with mesh_lib.use_mesh(mesh):
         cache = eng._cache_init(4)
-        logits, cache2 = eng._decode(eng.params, jnp.zeros((4,), jnp.int32),
-                                     cache, jnp.zeros((4,), jnp.int32))
+        tok, pos1, cache2 = eng._decode(eng.params, jnp.zeros((4,), jnp.int32),
+                                        cache, jnp.zeros((4,), jnp.int32))
     def batch_axis(arr):
         return arr.sharding.spec[1]
     for segment in cache2.segments:
@@ -209,7 +209,10 @@ def test_decode_io_shardings_are_explicit(lm):
                      "tail_k", "tail_v"):
             spec_entry = batch_axis(getattr(segment, name))
             assert spec_entry in ("data", ("data",)), (name, spec_entry)
-    assert logits.sharding.spec[0] in ("data", ("data",))
+    # the fused step's (B,) sampled-token / pos outputs — the only tensors
+    # the async loop reads back — ride the data axes like the slots
+    for vec in (tok, pos1):
+        assert vec.sharding.spec[0] in ("data", ("data",)), vec.sharding.spec
 
 
 def test_cache_specs_cover_kv_segments(lm):
