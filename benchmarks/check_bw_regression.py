@@ -1,0 +1,72 @@
+"""Kernel bandwidth regression guard for CI.
+
+    python benchmarks/check_bw_regression.py BASELINE.json CURRENT.json \
+        [--threshold 0.10]
+
+Compares `achieved_bw_gbs` per kv_kernel_analysis row between the committed
+baseline artifact and a freshly regenerated one, prints a markdown
+before/after table (piped into $GITHUB_STEP_SUMMARY by the workflow), and
+exits non-zero when any row regresses by more than the threshold. Rows
+present in only one file (new archs, renamed cells) are listed but never
+fail the check — only a like-for-like drop does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def iter_bw_rows(doc: dict):
+    for key, row in doc.items():
+        if isinstance(row, dict) and "achieved_bw_gbs" in row:
+            yield key, float(row["achieved_bw_gbs"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max fractional achieved-bandwidth drop per row")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = dict(iter_bw_rows(json.load(f)))
+    with open(args.current) as f:
+        cur = dict(iter_bw_rows(json.load(f)))
+
+    shared = sorted(set(base) & set(cur))
+    regressions = []
+    print("### kernel bandwidth vs committed baseline")
+    print("| row | baseline GB/s | current GB/s | delta |")
+    print("|---|---|---|---|")
+    for key in shared:
+        b, c = base[key], cur[key]
+        delta = (c - b) / b if b else 0.0
+        mark = ""
+        if delta < -args.threshold:
+            regressions.append((key, b, c, delta))
+            mark = " **REGRESSION**"
+        print(f"| {key} | {b:.1f} | {c:.1f} | {delta:+.1%}{mark} |")
+    for key in sorted(set(cur) - set(base)):
+        print(f"| {key} | — | {cur[key]:.1f} | new row |")
+    for key in sorted(set(base) - set(cur)):
+        print(f"| {key} | {base[key]:.1f} | — | removed row |")
+
+    if not shared:
+        print("\nno comparable rows — baseline/current artifacts disjoint")
+        return 1
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%}:")
+        for key, b, c, delta in regressions:
+            print(f"  {key}: {b:.1f} -> {c:.1f} GB/s ({delta:+.1%})")
+        return 1
+    print(f"\nall {len(shared)} shared rows within {args.threshold:.0%} "
+          f"of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

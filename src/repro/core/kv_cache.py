@@ -64,7 +64,8 @@ import numpy as np
 from repro import codec as codec_lib
 from repro.codec import plan as plan_lib
 from repro.codec.api import tile_bytes
-from repro.parallel.sharding import attn_hint, logical as shard_hint
+from repro.parallel.sharding import (attn_hint, logical as shard_hint,
+                                     table_slice_hint)
 
 BLOCK = 8
 
@@ -627,6 +628,25 @@ def attend_compressed(
     return out[:, None].astype(q.dtype)           # (B, 1, H, hd)
 
 
+def table_view(block_table: jax.Array,
+               attend_blocks: int | None = None) -> jax.Array:
+    """Static bucket slice of a block table: its first `attend_blocks`
+    entries (None / >= table width => the full table).
+
+    The decode-bucket ladder picks `attend_blocks` to cover the deepest
+    live slot's flushed watermark, so every trailing entry this view drops
+    can only name blocks the attend masks anyway — the slice is an exact
+    no-op on the attention output.  What it changes is cost: the reference
+    scan's chunk gather and the paged kernel's grid cover only the sliced
+    width, so decode-step work tracks occupied context, not pool capacity.
+    """
+    nb = block_table.shape[1]
+    if attend_blocks is None or attend_blocks >= nb:
+        return block_table
+    assert attend_blocks >= 1, attend_blocks
+    return table_slice_hint(block_table[:, :attend_blocks])
+
+
 def attend_auto(
     q: jax.Array,
     layer_cache: dict[str, jax.Array],
@@ -635,7 +655,8 @@ def attend_auto(
     *,
     kv_block: int = 1024,
     backend: str | None = None,
-    block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
+    block_table: jax.Array | None = None,  # (B, nblocks) page ids (paged)
+    pages_per_tile: int = 8,
 ) -> jax.Array:
     """Backend-dispatched decode attention over the compressed store.
 
@@ -644,15 +665,17 @@ def attend_auto(
     backend) uses the pure-JAX online-softmax scan above. Selection follows
     repro.codec.dispatch, same as the block codec itself. Both backends take
     the per-slot position vector, and both gather paged history through
-    `block_table` when given one (the kernel reads the table on the
-    scalar-prefetch path beside `pos`).
+    `block_table` when given one — possibly a `table_view` bucket slice —
+    (the kernel reads the table on the scalar-prefetch path beside `pos`;
+    `pages_per_tile` is the kernel's G-page tile width).
     """
     pos = as_pos_vec(pos, q.shape[0])
     if codec_lib.resolve_backend_name(backend) == "pallas":
         from repro.kernels.fused_attend import ops as fa_ops
 
         return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block,
-                                       block_table=block_table)
+                                       block_table=block_table,
+                                       pages_per_tile=pages_per_tile)
     return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block,
                              backend=backend, block_table=block_table)
 

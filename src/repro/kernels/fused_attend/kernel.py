@@ -10,20 +10,35 @@ constant matmuls, and the attention consumes K/V tiles that never exist in
 HBM — the analogue of the paper's IDCT feeding the PE array "in one
 computing stream".
 
-Layout per (batch, kv-head) plane:
+Dense plane kernel (attend_compressed_plane), per (batch, kv-head) plane:
   packed_k/v : (S/8, hd/8, k, k) int8     scale_k/v : (S/8, hd/8) f32
   q          : (H, hd) — the n_rep query heads sharing this kv head
   out        : (H, hd) f32 — attention over the FLUSHED history
                (< pos//8*8; the raw 8-token tail is merged by ops.py with
                the same online-softmax algebra)
+  Grid: (S / TILE_S,) sequence tiles; the online-softmax running state
+  (m, l, acc) lives in VMEM scratch carried across sequentially-executed
+  grid steps.
 
-Grid: (S / TILE_S,) sequence tiles; the online-softmax running state
-(m, l, acc) lives in VMEM scratch carried across sequentially-executed grid
-steps.
+Paged pool kernel (attend_paged), all planes in one explicit grid:
+  Grid: (B, Hkv, nblocks / G) — each grid step gathers G pages through the
+  block table (page ids ride the scalar-prefetch path, so every page DMA is
+  issued from SMEM-resident table entries), decompresses them into one
+  (G*8, hd) K/V tile, and runs MXU-shaped (n_rep, G*8) score / PV matmuls.
+  A tile whose first position is at or past the slot's flushed watermark
+  skips its decompress + matmuls entirely under `pl.when` (skipped tiles
+  contribute exactly nothing to the online-softmax state, so the output is
+  unchanged).  The finalize step merges the raw 8-token tail ring with the
+  same online-softmax algebra and NORMALIZES, so one pallas_call emits the
+  finished attention output — no separate XLA tail pass.  `nblocks` is
+  whatever table width the caller hands in: the serve engine slices the
+  table to a decode-ladder bucket covering the deepest live context
+  (core.kv_cache.table_view), so the grid tracks occupancy, not pool
+  capacity.
 
-VMEM per step (TILE_S=512, hd=128, keep=4): packed 2x16 KB int8 + scales
-2x4 KB + decompressed K/V tiles 2x256 KB f32 + q/out/state ~130 KB — well
-inside the ~16 MB budget, leaving room for double-buffered HBM pipelining.
+VMEM per grid step stays far inside the ~16 MB budget for every supported
+geometry (see the README kernel section for the per-(G, keep, hd) table);
+the dominant term is the two decompressed f32 tiles, 2 * G*8 * hd * 4 B.
 """
 from __future__ import annotations
 
@@ -44,12 +59,38 @@ def _dct_k_np(keep: int) -> np.ndarray:
     return _dct_matrix_np(BLOCK)[:keep].astype(np.float32)
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Platform auto-selection via the codec dispatch rules — compiled on
+    TPU, interpret elsewhere (CPU CI), REPRO_CODEC_INTERPRET override. The
+    same resolution ops.py applies, so direct kernel callers never silently
+    run interpreted on TPU."""
+    from repro.codec import dispatch as codec_dispatch  # lazy: no cycle
+
+    return codec_dispatch.resolve_interpret(interpret)
+
+
+def fit_tile(requested: int, total: int, unit: int = BLOCK) -> int:
+    """Largest multiple of `unit` dividing `total`, capped at `requested`.
+
+    The explicit tile-shrink rule shared by the sequence tiling (unit=8
+    tokens) and the page tiling (unit=1 page): the result is asserted to be
+    a unit multiple that divides `total` exactly — never a silent shrink to
+    a non-aligned width."""
+    assert total >= unit and total % unit == 0, (total, unit)
+    t = max(min(requested - requested % unit, total), unit)
+    while total % t:
+        t -= unit
+    assert unit <= t <= total and total % t == 0 and t % unit == 0, \
+        (requested, total, unit, t)
+    return t
+
+
 def _attend_kernel(
     pos_ref,                    # scalar prefetch: () int32
     pk_ref, sk_ref, pv_ref, sv_ref, q_ref, ck_ref,
     o_ref,
     m_ref, l_ref, acc_ref,      # VMEM scratch (carried)
-    *, keep: int, tile_s: int, scale: float,
+    *, tile_s: int, scale: float,
 ):
     ts8 = tile_s // BLOCK
     step = pl.program_id(0)
@@ -105,21 +146,21 @@ def attend_compressed_plane(
     pos: jax.Array,        # () int32
     *,
     tile_s: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused decompress+attend over one (batch, kv-head) plane.
 
     Returns (acc (H, hd), m (H, hd) broadcast, l (H, hd) broadcast) —
     un-normalized online-softmax stats over the flushed history, ready for
-    tail merging. out = acc / l after merging.
+    tail merging. out = acc / l after merging. interpret=None auto-selects
+    via the codec dispatch rules (compiled on TPU, interpret elsewhere).
     """
+    interpret = _resolve_interpret(interpret)
     ns, nh, k, _ = packed_k.shape
     s_total = ns * BLOCK
     hd = nh * BLOCK
     h = q.shape[0]
-    tile_s = min(tile_s, s_total)
-    while s_total % tile_s:
-        tile_s -= BLOCK
+    tile_s = fit_tile(tile_s, s_total)
     ts8 = tile_s // BLOCK
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -141,7 +182,7 @@ def attend_compressed_plane(
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_attend_kernel, keep=k, tile_s=tile_s,
+        functools.partial(_attend_kernel, tile_s=tile_s,
                           scale=1.0 / float(np.sqrt(hd))),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((3, h, hd), jnp.float32),
@@ -159,14 +200,16 @@ def attend_compressed_plane(
 def _attend_paged_kernel(
     pos_ref,                    # scalar prefetch: (B,) int32
     bt_ref,                     # scalar prefetch: (B, nblocks) int32 page ids
-    pk_ref, sk_ref, pv_ref, sv_ref, q_ref, ck_ref,
-    o_ref,
-    m_ref, l_ref, acc_ref,      # VMEM scratch (carried per (b, h) plane)
-    *, keep: int, scale: float,
+    *refs,                      # 4*G page refs, q, ck, tails, out, scratch
+    g_pages: int, scale: float,
 ):
+    page_refs = refs[:4 * g_pages]      # (pk, sk, pv, sv) per gathered page
+    (q_ref, ck_ref, tk_ref, tv_ref, o_ref,
+     m_ref, l_ref, acc_ref) = refs[4 * g_pages:]
     b = pl.program_id(0)
-    step = pl.program_id(2)     # one 8-token block group per grid step
-    ck = ck_ref[...]            # (k, 8) DCT constant (VMEM)
+    step = pl.program_id(2)             # one G-page tile per grid step
+    tile_s = g_pages * BLOCK
+    ck = ck_ref[...]                    # (k, 8) DCT constant (VMEM)
 
     @pl.when(step == 0)
     def _init():
@@ -174,37 +217,61 @@ def _attend_paged_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    def dec(p_ref, s_ref):
-        """One int8 page -> f32 (8, hd): per-8x8-block z -> Ck^T z Ck."""
-        z = p_ref[0, 0].astype(jnp.float32) * s_ref[0, 0][..., None, None]
-        t = jnp.einsum("ua,juv,vb->ajb", ck, z, ck)     # (8, nh, 8)
-        return t.reshape(BLOCK, -1)
+    flushed = (pos_ref[b] // BLOCK) * BLOCK
+    tile0 = step * tile_s
 
-    kt = dec(pk_ref, sk_ref)
-    vt = dec(pv_ref, sv_ref)
+    @pl.when(tile0 < flushed)           # skip tiles wholly past the watermark
+    def _tile():
+        def dec(p_ref, s_ref):
+            """One int8 page -> f32 (8, hd): per-8x8-block z -> Ck^T z Ck."""
+            z = p_ref[0, 0].astype(jnp.float32) * s_ref[0, 0][..., None, None]
+            t = jnp.einsum("ua,juv,vb->ajb", ck, z, ck)     # (8, nh, 8)
+            return t.reshape(BLOCK, -1)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale         # (n_rep, hd)
-    s = jax.lax.dot(q, kt.T, preferred_element_type=jnp.float32)  # (n_rep, 8)
-    kv_pos = step * BLOCK + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK), 1)
-    valid = kv_pos < (pos_ref[b] // BLOCK) * BLOCK      # flushed blocks only
-    s = jnp.where(valid, s, -jnp.inf)
+        kt = jnp.concatenate(
+            [dec(page_refs[4 * g], page_refs[4 * g + 1])
+             for g in range(g_pages)], axis=0)              # (G*8, hd)
+        vt = jnp.concatenate(
+            [dec(page_refs[4 * g + 2], page_refs[4 * g + 3])
+             for g in range(g_pages)], axis=0)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    p = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-        p, vt, preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_new
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (n_rep, hd)
+        s = jax.lax.dot(q, kt.T, preferred_element_type=jnp.float32)
+        kv_pos = tile0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_s), 1)
+        valid = kv_pos < flushed        # flushed blocks only
+        s = jnp.where(valid, s, -jnp.inf)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(valid, jnp.exp(s - m_safe), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, vt, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(step == pl.num_programs(2) - 1)
     def _finalize():
-        o_ref[0, 0, 0] = acc_ref[...]
-        o_ref[0, 0, 1] = jnp.broadcast_to(m_ref[...], acc_ref.shape)
-        o_ref[0, 0, 2] = jnp.broadcast_to(l_ref[...], acc_ref.shape)
+        # fused raw-tail merge: positions flushed..pos sit in the 8-token
+        # tail ring; same online-softmax algebra, then normalize — the
+        # kernel output is the finished attention, no XLA pass after it.
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        tk = tk_ref[0, :, 0].astype(jnp.float32)            # (8, hd)
+        tv = tv_ref[0, :, 0].astype(jnp.float32)
+        st = jax.lax.dot(q, tk.T, preferred_element_type=jnp.float32)
+        tail_pos = flushed + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK), 1)
+        tvalid = tail_pos <= pos_ref[b]
+        st = jnp.where(tvalid, st, -jnp.inf)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(st, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pt = jnp.where(tvalid, jnp.exp(st - m_safe), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l2 = l_ref[...] * alpha + jnp.sum(pt, axis=-1, keepdims=True)
+        acc2 = acc_ref[...] * alpha + jax.lax.dot(
+            pt, tv, preferred_element_type=jnp.float32)
+        o_ref[0, 0] = acc2 / jnp.maximum(l2, 1e-30)
 
 
 def attend_paged(
@@ -214,58 +281,75 @@ def attend_paged(
     scale_v: jax.Array,
     q: jax.Array,          # (B, Hkv, n_rep, hd)
     pos: jax.Array,        # (B,) int32 per-slot positions
-    block_table: jax.Array,  # (B, S/8) int32 page ids
+    block_table: jax.Array,  # (B, nblocks) page ids (maybe a bucket slice)
+    tail_k: jax.Array,     # (B, 8, Hkv, hd) raw tail ring
+    tail_v: jax.Array,
     *,
-    interpret: bool = True,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused decompress+attend over the PAGED pool, all (batch, kv-head)
-    planes in one explicit grid.
+    pages_per_tile: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused decompress+attend+tail over the PAGED pool, all (batch,
+    kv-head) planes in one explicit grid.
 
     The block table rides the scalar-prefetch path beside `pos`: each grid
-    step's BlockSpec index_map dereferences `bt[b, i]`, so the kernel DMAs
-    exactly the pages the slot owns — HBM traffic is the compressed pages
-    the block table names, never the dense (B, S/8, ...) layout.  Unmapped
-    table entries are 0 (a valid page) and masked by the flushed watermark.
+    step's BlockSpec index_maps dereference `bt[b, i*G + g]` for the tile's
+    G pages, so the kernel DMAs exactly the pages the table names — HBM
+    traffic is the compressed pages, never the dense (B, S/8, ...) layout.
+    Unmapped table entries are 0 (a valid page, masked by the flushed
+    watermark); tiles wholly past the watermark skip compute via pl.when.
+    `block_table` may be a decode-ladder bucket slice of the full table —
+    the grid covers only the slice. `pages_per_tile` shrinks to the largest
+    divisor of the table width (G=1 reproduces single-page stepping).
 
-    Returns un-normalized online-softmax stats (acc (B, Hkv, n_rep, hd),
-    m/l (B, Hkv, n_rep, 1)) ready for the raw-tail merge in ops.py.
+    Returns the NORMALIZED attention output (B, Hkv, n_rep, hd) f32 — the
+    raw-tail merge runs in the kernel's finalize step.
     """
+    interpret = _resolve_interpret(interpret)
     n_pages, hkv, nh, k, _ = packed_k.shape
     hd = nh * BLOCK
     b, _, n_rep, _ = q.shape
     nblocks = block_table.shape[1]
+    g_pages = fit_tile(pages_per_tile, nblocks, unit=1)
 
+    page_specs = []
+    for g in range(g_pages):
+        idx5 = lambda bi, h, i, pos, bt, g=g: \
+            (bt[bi, i * g_pages + g], h, 0, 0, 0)
+        idx3 = lambda bi, h, i, pos, bt, g=g: (bt[bi, i * g_pages + g], h, 0)
+        page_specs += [
+            pl.BlockSpec((1, 1, nh, k, k), idx5),
+            pl.BlockSpec((1, 1, nh), idx3),
+            pl.BlockSpec((1, 1, nh, k, k), idx5),
+            pl.BlockSpec((1, 1, nh), idx3),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, nblocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, nh, k, k),
-                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0, 0, 0)),
-            pl.BlockSpec((1, 1, nh),
-                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0)),
-            pl.BlockSpec((1, 1, nh, k, k),
-                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0, 0, 0)),
-            pl.BlockSpec((1, 1, nh),
-                         lambda bi, h, i, pos, bt: (bt[bi, i], h, 0)),
+        grid=(b, hkv, nblocks // g_pages),
+        in_specs=page_specs + [
             pl.BlockSpec((1, 1, n_rep, hd),
                          lambda bi, h, i, pos, bt: (bi, h, 0, 0)),
             pl.BlockSpec((k, BLOCK), lambda bi, h, i, pos, bt: (0, 0)),
+            pl.BlockSpec((1, BLOCK, 1, hd),
+                         lambda bi, h, i, pos, bt: (bi, 0, h, 0)),
+            pl.BlockSpec((1, BLOCK, 1, hd),
+                         lambda bi, h, i, pos, bt: (bi, 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 3, n_rep, hd),
-                               lambda bi, h, i, pos, bt: (bi, h, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, n_rep, hd),
+                               lambda bi, h, i, pos, bt: (bi, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((n_rep, 1), jnp.float32),   # m
             pltpu.VMEM((n_rep, 1), jnp.float32),   # l
             pltpu.VMEM((n_rep, hd), jnp.float32),  # acc
         ],
     )
-    out = pl.pallas_call(
-        functools.partial(_attend_paged_kernel, keep=k,
+    # the same pool arrays are passed once per tile lane: each lane's
+    # BlockSpec walks its own table stride, XLA aliases the operands
+    pages = (packed_k, scale_k, packed_v, scale_v) * g_pages
+    return pl.pallas_call(
+        functools.partial(_attend_paged_kernel, g_pages=g_pages,
                           scale=1.0 / float(np.sqrt(hd))),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, 3, n_rep, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, n_rep, hd), jnp.float32),
         interpret=interpret,
     )(pos.astype(jnp.int32), block_table.astype(jnp.int32),
-      packed_k, scale_k, packed_v, scale_v, q, jnp.asarray(_dct_k_np(k)))
-    acc, m_b, l_b = out[:, :, 0], out[:, :, 1], out[:, :, 2]
-    return acc, m_b[..., :1], l_b[..., :1]
+      *pages, q, jnp.asarray(_dct_k_np(k)), tail_k, tail_v)

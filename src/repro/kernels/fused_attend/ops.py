@@ -1,5 +1,7 @@
-"""jit-able wrapper: fused kernel over all (batch, kv-head) planes + raw-tail
-merge — the drop-in decode attention for the compressed KV cache."""
+"""jit-able wrapper: fused kernel over all (batch, kv-head) planes — the
+drop-in decode attention for the compressed KV cache.  The dense-plane path
+merges the raw tail here in XLA; the paged kernel fuses the tail merge into
+its finalize step and returns the normalized output directly."""
 from __future__ import annotations
 
 import functools
@@ -26,7 +28,8 @@ def attend_with_tail(
     *,
     tile_s: int = 512,
     interpret: bool | None = None,
-    block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
+    block_table: jax.Array | None = None,  # (B, nblocks) page ids (paged)
+    pages_per_tile: int = 8,
 ) -> jax.Array:
     """Kernel-backed equivalent of core.kv_cache.attend_compressed.
 
@@ -36,8 +39,11 @@ def attend_with_tail(
     rules: compiled on TPU, interpret elsewhere (CPU CI).
 
     With `block_table` the cache planes are the shared page pool and the
-    fused kernel gathers each slot's pages through the table (block ids on
-    the scalar-prefetch path); the raw-tail merge below is identical.
+    fused paged kernel gathers G pages per grid step through the table
+    (page ids on the scalar-prefetch path) and merges the raw tail in its
+    finalize step — one pallas_call emits the normalized output.  The
+    table may be a decode-ladder bucket slice of the full table (see
+    core.kv_cache.table_view): the kernel grid covers only the slice.
     """
     interpret = codec_dispatch.resolve_interpret(interpret)
     b, _, h, hd = q.shape
@@ -48,26 +54,29 @@ def attend_with_tail(
     qg = q[:, 0].reshape(b, hkv, n_rep, hd)
 
     if block_table is not None:
-        acc, m, l = attend_paged(
+        out = attend_paged(
             layer_cache["packed_k"], layer_cache["scale_k"],
             layer_cache["packed_v"], layer_cache["scale_v"],
-            qg, pos, block_table, interpret=interpret,
-        )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
-    else:
-        # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
-        def plane_axes(x):
-            return jnp.swapaxes(x, 1, 2)
+            qg, pos, block_table,
+            layer_cache["tail_k"], layer_cache["tail_v"],
+            pages_per_tile=pages_per_tile, interpret=interpret,
+        )  # (B, Hkv, n_rep, hd) normalized — tail merged in-kernel
+        return attn_hint(out.reshape(b, 1, h, hd).astype(q.dtype))
 
-        kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
-                                 interpret=interpret)
-        # vmap over batch (pos mapped: per-slot horizon) then kv-head
-        # (shared pos)
-        acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
-                             in_axes=(0, 0, 0, 0, 0, 0))(
-            plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
-            plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
-            qg, pos,
-        )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
+    # (B, S/8, Hkv, hd/8, k, k) -> planes (B, Hkv, S/8, hd/8, k, k)
+    def plane_axes(x):
+        return jnp.swapaxes(x, 1, 2)
+
+    kern = functools.partial(attend_compressed_plane, tile_s=tile_s,
+                             interpret=interpret)
+    # vmap over batch (pos mapped: per-slot horizon) then kv-head
+    # (shared pos)
+    acc, m, l = jax.vmap(jax.vmap(kern, in_axes=(0, 0, 0, 0, 0, None)),
+                         in_axes=(0, 0, 0, 0, 0, 0))(
+        plane_axes(layer_cache["packed_k"]), plane_axes(layer_cache["scale_k"]),
+        plane_axes(layer_cache["packed_v"]), plane_axes(layer_cache["scale_v"]),
+        qg, pos,
+    )  # acc (B, Hkv, n_rep, hd), m/l (B, Hkv, n_rep, 1)
 
     # ---- merge the raw tail (positions pos//8*8 .. pos, per row) ----------
     tk = jnp.swapaxes(layer_cache["tail_k"], 1, 2).astype(jnp.float32)  # (B,Hkv,8,hd)

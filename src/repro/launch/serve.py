@@ -73,6 +73,18 @@ def main(argv=None):
                          "of 8, <= max-seq) the engine compiles prefill at; "
                          "admission rounds prompts UP to the ladder. Default: "
                          "powers-of-two multiples of 8 capped at max-seq")
+    ap.add_argument("--decode-buckets", default=None,
+                    help="paged pool only: comma-separated context-length "
+                         "buckets (multiples of 8, <= max-seq) the decode "
+                         "step is compiled at; each step attends a static "
+                         "bucket//8-entry block-table slice covering the "
+                         "deepest live slot. 'off' pins the single "
+                         "full-capacity step. Default: powers-of-two "
+                         "multiples of 8 capped at max-seq")
+    ap.add_argument("--decode-tile-pages", type=int, default=8,
+                    help="pages the paged attend kernel gathers (and scores "
+                         "as one (G*8, head_dim) tile) per grid step; "
+                         "shrunk to a divisor of each bucket's block count")
     ap.add_argument("--aot-warmup", action="store_true",
                     help="compile the whole prefill ladder + decode step at "
                          "engine build, so no XLA compile happens under "
@@ -119,6 +131,12 @@ def main(argv=None):
         plan = plan_lib.as_plan(args.kv_plan, keep=args.kv_keep)
     buckets = tuple(int(b) for b in args.prefill_buckets.split(",")) \
         if args.prefill_buckets else None
+    if args.decode_buckets == "off":
+        dec_buckets = False
+    elif args.decode_buckets:
+        dec_buckets = tuple(int(b) for b in args.decode_buckets.split(","))
+    else:
+        dec_buckets = None
     sc = E.ServeConfig(
         max_seq=args.max_seq, max_new_tokens=args.max_new,
         kv_compress=args.kv_compress, plan=plan,
@@ -127,6 +145,7 @@ def main(argv=None):
         prefill_buckets=buckets, aot_warmup=args.aot_warmup,
         packed_admission=not args.no_packed_admission,
         async_host=not args.sync_host,
+        decode_buckets=dec_buckets, decode_tile_pages=args.decode_tile_pages,
     )
     eng = E.Engine(api, params, sc, batch=args.batch, scheduler=args.scheduler)
 
@@ -183,6 +202,9 @@ def main(argv=None):
               f"admissions blocked on pages "
               f"{eng.stats['admit_blocked_on_pages']}, "
               f"{ps['slots_per_gb']:.0f} slots/GB")
+        mean_bucket = st["decode_bucket_tokens"] / max(st["steps"], 1)
+        print(f"decode ladder {list(eng.decode_ladder.buckets)}: mean bucket "
+              f"{mean_bucket:.1f} of {args.max_seq} max-seq tokens/step")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:12]}{'...' if len(r.out_tokens) > 12 else ''}")
     return done

@@ -450,3 +450,16 @@ def logical(x: jax.Array, *entries) -> jax.Array:
         else:
             out.append(None)
     return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def table_slice_hint(table: jax.Array) -> jax.Array:
+    """Placement constraint for a decode-ladder block-table slice.
+
+    A bucket slice `table_view(bt, attend_blocks)` must keep the FULL
+    table's placement (`cache_specs`'s block_table rule: slots on the data
+    axes, table entries replicated) — otherwise the static slice inside the
+    decode step would resolve to a fresh GSPMD decision per bucket and the
+    per-bucket jits could disagree on where the gather runs.  One rule,
+    applied to every sliced view, keeps all ladder buckets layout-identical
+    to the unsliced step."""
+    return logical(table, "batch", None)

@@ -37,6 +37,12 @@ from dataclasses import asdict, dataclass, field
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link
+# Per-grid-step DMA latency a double-buffered pallas pipeline cannot hide
+# when each step's tiles are tiny (a paged-attend page is ~100s of bytes):
+# issue + descriptor + HBM round-trip tail, ~0.5us. A kernel whose grid has
+# many small steps is latency-bound long before it is bandwidth-bound —
+# exactly what multi-page (G) tiling amortizes.
+PAGE_DMA_LATENCY_S = 0.5e-6
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -164,23 +170,37 @@ class Roofline:
         return d
 
 
-def hbm_bandwidth_row(bytes_per_step: float, compute_flops: float = 0.0) -> dict:
+def hbm_bandwidth_row(bytes_per_step: float, compute_flops: float = 0.0,
+                      grid_steps: float = 0.0,
+                      mxu_efficiency: float = 1.0) -> dict:
     """Achieved vs peak HBM bandwidth for one (memory-streaming) step.
 
     `bytes_per_step` is what the kernel ACTUALLY streams (for attend_paged:
     only pages mapped in the block table, their scales, the raw tails, and
     the table itself — never unmapped pool capacity). The step-time bound is
-    the roofline max of the memory and compute terms; achieved bandwidth is
-    the useful stream over that bound, so `hbm_utilization` < 1 exactly when
-    the step leaves the memory system idle waiting on compute.
+    the roofline max of the memory, compute, and grid-latency terms;
+    achieved bandwidth is the useful stream over that bound, so
+    `hbm_utilization` < 1 exactly when the step leaves the memory system
+    idle waiting on compute or on per-tile DMA issue.
+
+    `grid_steps` charges PAGE_DMA_LATENCY_S per pallas grid step — the
+    un-hideable tail of a tiny-tile double-buffered pipeline (0 = dense
+    streaming kernel, latency folded into bandwidth). `mxu_efficiency`
+    derates PEAK_FLOPS for tiles narrower than the 128-lane contraction
+    (a one-page tile runs 8/128 of the MXU).
     """
     mem_s = bytes_per_step / HBM_BW
-    comp_s = compute_flops / PEAK_FLOPS
-    step_s = max(mem_s, comp_s)
+    comp_s = compute_flops / (PEAK_FLOPS * max(mxu_efficiency, 1e-9))
+    lat_s = grid_steps * PAGE_DMA_LATENCY_S
+    step_s = max(mem_s, comp_s, lat_s)
     achieved = bytes_per_step / step_s if step_s else 0.0
     return {
         "bytes_per_step": float(bytes_per_step),
         "step_bound_s": step_s,
+        "memory_s": mem_s,
+        "compute_s": comp_s,
+        "grid_latency_s": lat_s,
+        "grid_steps": float(grid_steps),
         "achieved_bw_gbs": achieved / 1e9,
         "peak_bw_gbs": HBM_BW / 1e9,
         "hbm_utilization": achieved / HBM_BW,

@@ -105,6 +105,8 @@ def decode_step_compressed(
     kv_block: int = 1024,
     codec_backend: str | None = None,
     flush_page: jax.Array | None = None,  # (B,) page ids (paged pool only)
+    attend_blocks: int | None = None,     # static table-slice width (paged)
+    pages_per_tile: int = 8,              # paged kernel G-page tile width
 ) -> tuple[jax.Array, Any]:
     """One-token decode against the DCT-compressed KV store.
 
@@ -120,7 +122,10 @@ def decode_step_compressed(
     reserved for row b's flush THIS step (out-of-range id = no flush).  The
     block-table row update happens once here — every layer of a slot
     flushes the same block index, so the table is shared — and each layer's
-    update/attend scatters/gathers through it.
+    update/attend scatters/gathers through it.  `attend_blocks` (the
+    decode-bucket ladder pick, in table entries) statically slices the
+    table the ATTEND sees to the occupied context; the flush update and
+    the cache's stored table always stay full-width.
     """
     assert cfg.attn_type == "gqa", "compressed cache is for GQA families"
     b_sz = token.shape[0]
@@ -138,10 +143,12 @@ def decode_step_compressed(
         blk = jnp.where(flush_row, pos // kvc.BLOCK, nblocks)
         block_table = cache.block_table.at[rows, blk].set(fp, mode="drop")
         block_table = sh.logical(block_table, "batch", None)
+        att_table = kvc.table_view(block_table, attend_blocks)
     else:
         assert flush_page is None, "flush_page is a paged-pool argument"
         fp = None
         block_table = None
+        att_table = None
     x = params["embed"][token][:, None, :].astype(params["embed"].dtype)
     positions = pos[:, None]  # (B, 1) per-row rope positions
     norm = T._norm(cfg)
@@ -160,7 +167,8 @@ def decode_step_compressed(
             lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend,
                                    flush_page=fp)
             attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
-                                   backend=backend, block_table=block_table)
+                                   backend=backend, block_table=att_table,
+                                   pages_per_tile=pages_per_tile)
             attn = sh.attn_hint(attn)
             h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
             if "moe" in p:
@@ -330,6 +338,19 @@ class ServeConfig:
     aot_warmup: bool = False
     packed_admission: bool = True
     async_host: bool = True
+    # Decode-bucket ladder (paged pool only). Each bucket owns a jitted
+    # decode step whose attend covers a static `bucket // 8`-entry slice of
+    # the block table; the engine picks the smallest bucket covering the
+    # deepest live slot's flushed context each step, so decode cost tracks
+    # OCCUPIED context instead of pool capacity. None = automatic
+    # powers-of-two ladder (pipeline.auto_buckets); False/"off" = single
+    # full-capacity bucket (the pre-ladder behaviour); an explicit tuple
+    # narrows it. `decode_tile_pages` is the paged kernel's G: pages
+    # gathered (and decompressed/scored as one (G*8, hd) tile) per grid
+    # step — 8 fills the MXU's 128-lane contraction at hd>=...; shrunk to a
+    # divisor of the bucket's block count per jit.
+    decode_buckets: Any = None
+    decode_tile_pages: int = 8
 
     def resolved_plan(self) -> plan_lib.CompressionPlan:
         """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
@@ -386,11 +407,14 @@ def make_steps(api: ModelAPI, sc: ServeConfig):
             return prefill_compressed_paged(params, tokens, cfg, plan=plan,
                                             lengths=lengths)
 
-        def decode_fn(params, token, cache, pos, flush_page):
+        def decode_fn(params, token, cache, pos, flush_page,
+                      attend_blocks=None):
             return decode_step_compressed(params, token, cache, pos, cfg,
                                           kv_block=sc.kv_block,
                                           codec_backend=sc.codec_backend,
-                                          flush_page=flush_page)
+                                          flush_page=flush_page,
+                                          attend_blocks=attend_blocks,
+                                          pages_per_tile=sc.decode_tile_pages)
 
         cache_init = lambda b: kvc.init_paged_cache(cfg, b, sc.max_seq,
                                                     n_pages, plan=plan)
@@ -479,8 +503,10 @@ def make_fused_steps(prefill_fn, decode_fn, sc: ServeConfig, *, paged: bool):
             return admit_core(params, tokens, lengths, None)
 
         if paged:
-            def step_fn(params, token, cache, pos, flush_page):
-                logits, cache = decode_fn(params, token, cache, pos, flush_page)
+            def step_fn(params, token, cache, pos, flush_page,
+                        attend_blocks=None):
+                logits, cache = decode_fn(params, token, cache, pos, flush_page,
+                                          attend_blocks=attend_blocks)
                 return pick(logits, None), pos + 1, cache
         else:
             def step_fn(params, token, cache, pos):
@@ -491,8 +517,10 @@ def make_fused_steps(prefill_fn, decode_fn, sc: ServeConfig, *, paged: bool):
             return admit_core(params, tokens, lengths, rng)
 
         if paged:
-            def step_fn(params, token, cache, pos, flush_page, rng):
-                logits, cache = decode_fn(params, token, cache, pos, flush_page)
+            def step_fn(params, token, cache, pos, flush_page, rng,
+                        attend_blocks=None):
+                logits, cache = decode_fn(params, token, cache, pos, flush_page,
+                                          attend_blocks=attend_blocks)
                 return pick(logits, rng), pos + 1, cache
         else:
             def step_fn(params, token, cache, pos, rng):
@@ -654,6 +682,15 @@ class Engine:
                                                  paged=self.paged)
             admit_fn = pl.counting("prefill", tc, admit_fn)
             step_fn = pl.counting("decode", tc, step_fn)
+            if self.paged:
+                self.decode_ladder = pl.DecodeLadder.build(sc.max_seq,
+                                                           sc.decode_buckets)
+                # one partial per bucket: each binds its static table-slice
+                # width, so each is a distinct jit (and a distinct "decode"
+                # trace — the warmed count is len(buckets))
+                bucket_fns = {
+                    t: functools.partial(step_fn, attend_blocks=t // kvc.BLOCK)
+                    for t in self.decode_ladder.buckets}
             write_fn = pl.counting(
                 "write", tc,
                 kvc.paged_write_rows if self.paged else cache_write_rows)
@@ -663,7 +700,13 @@ class Engine:
             fix_fn = pl.counting("fix", tc, token_fix)
             if sc.mesh is None:
                 self._admit_step = jax.jit(admit_fn)
-                self._decode = jax.jit(step_fn)
+                if self.paged:
+                    self._decode_fns = {t: jax.jit(fn)
+                                        for t, fn in bucket_fns.items()}
+                    self._decode = self._decode_fns[
+                        self.decode_ladder.buckets[-1]]
+                else:
+                    self._decode = jax.jit(step_fn)
                 self._cache_init = cache_init
                 self._write = jax.jit(write_fn)
                 self._reset = jax.jit(reset_fn)
@@ -678,10 +721,23 @@ class Engine:
                     dec_in.append(shd["vec"])
                 if sc.temperature > 0.0:
                     dec_in.append(shd["rep"])
-                self._decode = jax.jit(
-                    step_fn, in_shardings=tuple(dec_in),
-                    out_shardings=(shd["vec"], shd["vec"], shd["pool"]),
-                )
+                dec_out = (shd["vec"], shd["vec"], shd["pool"])
+                if self.paged:
+                    # every bucket shares the full-capacity step's shardings:
+                    # inputs are shape-identical across buckets (the table
+                    # slice is internal and static), so the jit cache keys
+                    # only on the bound slice width
+                    self._decode_fns = {
+                        t: jax.jit(fn, in_shardings=tuple(dec_in),
+                                   out_shardings=dec_out)
+                        for t, fn in bucket_fns.items()}
+                    self._decode = self._decode_fns[
+                        self.decode_ladder.buckets[-1]]
+                else:
+                    self._decode = jax.jit(
+                        step_fn, in_shardings=tuple(dec_in),
+                        out_shardings=dec_out,
+                    )
                 # admission tensors are bucket-shaped (rows x bucket varies
                 # across the warmed ladder), so the admit step rides
                 # placement propagation off the committed params; the
@@ -728,7 +784,7 @@ class Engine:
                       "warmup_s": 0.0,
                       "slot_steps_live": 0, "slot_steps_total": 0,
                       "peak_live_slots": 0, "admit_blocked_on_pages": 0,
-                      "peak_pages_in_use": 0}
+                      "peak_pages_in_use": 0, "decode_bucket_tokens": 0}
         self._lat = {"ttft_s": [], "itl_s": []}
         self._staged = []
         self._worker = None
@@ -1008,7 +1064,19 @@ class Engine:
         """Issue one fused decode step; token/pos stay on device."""
         t0 = time.perf_counter()
         args = [self.params, self._tok_dev, cache, self._pos_dev]
+        decode = self._decode
         if self.paged:
+            # decode-bucket ladder: the attend only reads table entries
+            # below a row's flushed watermark (pos//8*8 — the page flushed
+            # THIS step is still the raw tail), so the deepest live slot's
+            # watermark picks the smallest warmed bucket that covers every
+            # row. Retired slots' device positions reset to 0 before the
+            # next dispatch, so they never hold the bucket high.
+            need = max(((int(self._devpos[i]) // kvc.BLOCK) * kvc.BLOCK
+                        for i in live), default=0)
+            bucket = self.decode_ladder.bucket_for(need)
+            decode = self._decode_fns[bucket]
+            self.stats["decode_bucket_tokens"] += bucket
             # hand each flushing row its reserved page; every other row gets
             # an out-of-range id the device scatter drops. `_devpos` mirrors
             # the DEVICE position (which advances on speculative steps the
@@ -1024,7 +1092,7 @@ class Engine:
         if self.sc.temperature > 0.0:
             self.rng, sub = jax.random.split(self.rng)
             args.append(sub)
-        tok, pos1, cache = self._decode(*args)
+        tok, pos1, cache = decode(*args)
         self._tok_dev, self._pos_dev = tok, pos1
         self._devpos += 1
         self.stats["steps"] += 1

@@ -1,6 +1,6 @@
-"""Host-side serving pipeline: AOT prefill buckets + async bookkeeping.
+"""Host-side serving pipeline: AOT prefill/decode buckets + async bookkeeping.
 
-Three pieces, all host machinery (nothing here traces into a jit):
+Four pieces, all host machinery (nothing here traces into a jit):
 
   * `PrefillLadder` — the fixed set of prompt-length buckets the engine
     compiles AHEAD of traffic.  Admission rounds every prompt up to the
@@ -9,6 +9,16 @@ Three pieces, all host machinery (nothing here traces into a jit):
     auto ladder is powers-of-two multiples of the 8-token DCT block capped
     at max_seq (8, 16, 32, ..., max_seq); an explicit ladder narrows it,
     and a prompt that fits no bucket raises — never a silent compile.
+
+  * `DecodeLadder` — the paged engine's context-length buckets.  Each
+    bucket owns a jitted decode step whose attend covers a static
+    `bucket // 8`-entry slice of the block table; the engine picks the
+    smallest bucket covering the deepest live slot's flushed watermark at
+    every dispatch, so decode-step cost scales with OCCUPIED context
+    instead of pool capacity.  All buckets are warmed at construction
+    exactly like the prefill ladder (zero jit traces under traffic), and
+    the slice is an exact no-op on outputs: dropped table entries can only
+    name blocks the watermark masks anyway.
 
   * `BackgroundWorker` — a daemon thread draining a backlog queue of
     bookkeeping closures (token appends, latency accounting, returning a
@@ -107,6 +117,53 @@ class PrefillLadder:
             if n <= r:
                 return r
         return batch
+
+
+# ---------------------------------------------------------------------------
+# Decode-bucket ladder (paged pool)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DecodeLadder:
+    """Context-length buckets the paged decode step is compiled at.
+
+    A bucket of T tokens means a decode step whose attend reads only the
+    first T // 8 block-table entries (a static slice — see
+    core.kv_cache.table_view).  The ladder always ends at max_seq, so any
+    legal flushed watermark has a covering bucket; `bucket_for` never
+    raises under traffic the pool itself can hold.
+    """
+
+    buckets: tuple[int, ...]
+
+    @classmethod
+    def build(cls, max_seq: int, buckets=None) -> "DecodeLadder":
+        if buckets is None:  # auto: powers-of-two x BLOCK, max_seq included
+            return cls(auto_buckets(max_seq))
+        if buckets is False or buckets == "off":
+            return cls((max_seq,))  # single full-capacity bucket (pre-ladder)
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if not buckets:
+            raise ValueError("empty decode ladder")
+        for b in buckets:
+            if b % BLOCK or b < BLOCK:
+                raise ValueError(
+                    f"decode bucket {b} is not a multiple of {BLOCK}")
+        if buckets[-1] > max_seq:
+            raise ValueError(
+                f"decode bucket {buckets[-1]} exceeds max_seq={max_seq}")
+        if buckets[-1] < max_seq:
+            buckets = buckets + (max_seq,)  # must always cover a full pool
+        return cls(buckets)
+
+    def bucket_for(self, context_tokens: int) -> int:
+        """Smallest bucket covering `context_tokens` of flushed context."""
+        for b in self.buckets:
+            if context_tokens <= b:
+                return b
+        raise ValueError(
+            f"flushed context of {context_tokens} tokens exceeds the decode "
+            f"ladder {self.buckets} — deeper than the pool itself")
 
 
 # ---------------------------------------------------------------------------
@@ -239,13 +296,19 @@ def warmup_engine(engine) -> float:
             else:
                 cache = engine._write(cache, slot_cache, drop_slots)
             first.block_until_ready()
-    # decode + slot lifecycle steps (one shape each)
+    # decode + slot lifecycle steps.  A paged engine owns one decode jit
+    # per ladder bucket (static table-slice width) — warm every one; the
+    # dense engine has a single decode shape.
     step_args = [engine.params, zeros_b, cache, zeros_b]
     if engine.paged:
         step_args.append(jnp.full((engine.batch,), engine._n_pages, jnp.int32))
     if temp:
         step_args.append(rng)
-    tok, pos1, cache = engine._decode(*step_args)
+    if engine.paged:
+        for fn in engine._decode_fns.values():
+            tok, pos1, cache = fn(*step_args)
+    else:
+        tok, pos1, cache = engine._decode(*step_args)
     cache = engine._reset(cache, jnp.int32(0))
     drop_idx = jnp.full((engine.batch,), engine.batch, jnp.int32)
     tok, pos1 = engine._fix(tok, pos1, drop_idx, zeros_b, zeros_b)
