@@ -8,7 +8,11 @@ baseline artifact and a freshly regenerated one, prints a markdown
 before/after table (piped into $GITHUB_STEP_SUMMARY by the workflow), and
 exits non-zero when any row regresses by more than the threshold. Rows
 present in only one file (new archs, renamed cells) are listed but never
-fail the check — only a like-for-like drop does.
+fail the check — only a like-for-like drop does: rows in the fresh analysis
+with no committed baseline are reported as "new (no baseline)" and start
+being guarded once a baseline refresh commits them, and a current file
+that is ALL new rows passes (the disjoint-artifacts failure fires only
+when the current run also dropped every baseline row).
 """
 from __future__ import annotations
 
@@ -49,12 +53,19 @@ def main(argv=None):
             regressions.append((key, b, c, delta))
             mark = " **REGRESSION**"
         print(f"| {key} | {b:.1f} | {c:.1f} | {delta:+.1%}{mark} |")
-    for key in sorted(set(cur) - set(base)):
-        print(f"| {key} | — | {cur[key]:.1f} | new row |")
+    fresh = sorted(set(cur) - set(base))
+    for key in fresh:
+        print(f"| {key} | — | {cur[key]:.1f} | new (no baseline) |")
     for key in sorted(set(base) - set(cur)):
         print(f"| {key} | {base[key]:.1f} | — | removed row |")
 
     if not shared:
+        if fresh:
+            # every current row is new: nothing to guard yet, not a failure
+            # (commit a refreshed baseline to start guarding them)
+            print(f"\n{len(fresh)} new row(s), no baseline to compare "
+                  "against yet")
+            return 0
         print("\nno comparable rows — baseline/current artifacts disjoint")
         return 1
     if regressions:

@@ -26,6 +26,17 @@ slots (asserted >= 1.5x live at once on a uniform probe workload) with
 greedy outputs bitwise identical to the dense engine on the mixed workload
 — paying only for blocks requests actually fill, not slots x max_seq.
 
+The `paged_tiered` row shrinks the device pool to barely one request's
+horizon and backs it with a host-RAM tier: the probe workload can only run
+via forced eviction (cold slots parked, their compressed pages spilled) and
+fault-path restores, and its tokens must stay bitwise the untiered probe's.
+The `prefix_shared` row serves a common-system-prompt workload at a page
+budget of exactly 1x prefix + Nx suffix: copy-on-write prefix sharing
+stores the prefix once and runs all N slots live where the unshared engine
+fits only a third of them. Both rows assert zero new jit traces after
+warmup — the tier fault path and the share verification ride the same
+AOT-warmed ladders as everything else.
+
 `--mesh DATAxMODEL` runs the schedulers on a host device mesh (slots on
 data, heads on model) and records the mesh axis sizes plus the per-device
 slice of the KV pool in the artifact — needs that many local devices (CI
@@ -65,10 +76,12 @@ def build_workload(cfg, n_requests: int, prompt_hi: int, new_hi: int, seed=0):
 def run_one(api, params, sc, batch, scheduler, workload_args, reqs=None,
             label=None):
     eng = E.Engine(api, params, sc, batch=batch, scheduler=scheduler)
+    snap = eng.trace_counts.snapshot()  # warmup (if any) already ran
     reqs = build_workload(api.cfg, *workload_args) if reqs is None else reqs
     t0 = time.perf_counter()
     done = eng.generate(reqs)
     wall = time.perf_counter() - t0
+    new_traces = eng.trace_counts.delta(snap)
     st = eng.stats
     # first token per request comes from prefill logits, not the decode loop
     dec_tok = st["tokens_out"] - st["requests"]
@@ -98,6 +111,7 @@ def run_one(api, params, sc, batch, scheduler, workload_args, reqs=None,
         "mean_out_len": round(float(np.mean([len(r.out_tokens) for r in done])), 2),
         "kv_pool_bytes": pool["kv_pool_bytes"],
         "slots_per_gb": round(pool["slots_per_gb"], 1),
+        "new_traces": new_traces,
     }
     if eng.paged:
         row.update(pool_pages=pool["pool_pages"],
@@ -107,6 +121,16 @@ def run_one(api, params, sc, batch, scheduler, workload_args, reqs=None,
                    decode_buckets=list(eng.decode_ladder.buckets),
                    mean_decode_bucket=round(
                        st["decode_bucket_tokens"] / max(st["steps"], 1), 1))
+    if sc.tiered:
+        row.update(host_pool_pages=pool["host_pool_pages"],
+                   pages_spilled=pool["pages_spilled"],
+                   pages_restored=pool["pages_restored"],
+                   slots_parked=pool["slots_parked"],
+                   slots_resumed=pool["slots_resumed"])
+    if sc.prefix_sharing:
+        row.update(prefix_shared_blocks=pool["prefix_shared_blocks"],
+                   shared_physical_pages=pool["shared_physical_pages"],
+                   prefix_demotions=pool["prefix_demotions"])
     return eng, done, row
 
 
@@ -175,15 +199,56 @@ def main(argv=None):
                       mesh=mesh, pool_pages=pool_pages, aot_warmup=True,
                       decode_buckets=False),
         2 * args.batch, "continuous", workload, label="paged_full_bucket"))
-    probe = [E.Request(uid=i,
-                       prompt=np.arange(probe_plen, dtype=np.int32) + i,
-                       max_new=probe_new) for i in range(2 * args.batch)]
+    def mk_probe():
+        return [E.Request(uid=i,
+                          prompt=np.arange(probe_plen, dtype=np.int32) + i,
+                          max_new=probe_new) for i in range(2 * args.batch)]
     engines_rows.append(run_one(api, params, sc_paged, 2 * args.batch,
-                                "continuous", workload, reqs=probe,
+                                "continuous", workload, reqs=mk_probe(),
                                 label="paged_probe"))
 
+    # ---- tiered pool: device pool too small for ONE slot's lifetime ----
+    # barely-above-horizon device pages + a host tier the size of the paged
+    # row's pool: the probe workload cannot run without forced eviction
+    # (park/spill) and fault-path restores, and its tokens must still be
+    # bitwise the untiered probe's.
+    horizon = (probe_plen + probe_new - 1) // 8
+    sc_tier = E.ServeConfig(max_seq=max_seq, kv_compress=True,
+                            kv_keep=args.kv_keep, codec_backend="reference",
+                            mesh=mesh, pool_pages=horizon + 1,
+                            host_pool_pages=pool_pages, aot_warmup=True)
+    engines_rows.append(run_one(api, params, sc_tier, 2 * args.batch,
+                                "continuous", workload, reqs=mk_probe(),
+                                label="paged_tiered"))
+
+    # ---- prefix sharing: common system prompt, unique suffixes --------
+    # N requests share one 2-block (16-token) prefix + a 4-token unique
+    # tail. Shared pool budget = 1x prefix + N x 1-page suffix horizon —
+    # EXACTLY enough for all N live at once when the prefix is stored
+    # once; the unshared engine at the same budget can only hold
+    # floor(budget/3) slots live.
+    def mk_shared(n):
+        rng = np.random.default_rng(7)
+        pre = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        return [E.Request(uid=i, prompt=np.concatenate(
+            [pre, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)]),
+            max_new=12) for i in range(n)]
+    n_share = 2 * args.batch
+    share_pages = 2 + n_share  # (20+12-1)//8 = 3 pages/req, 2 shared
+    kw_share = dict(max_seq=max_seq, kv_compress=True, kv_keep=args.kv_keep,
+                    codec_backend="reference", mesh=mesh,
+                    pool_pages=share_pages, aot_warmup=True)
+    engines_rows.append(run_one(
+        api, params, E.ServeConfig(**kw_share), n_share, "continuous",
+        workload, reqs=mk_shared(n_share), label="prefix_unshared"))
+    engines_rows.append(run_one(
+        api, params, E.ServeConfig(**kw_share, prefix_sharing=True),
+        n_share, "continuous", workload, reqs=mk_shared(n_share),
+        label="prefix_shared"))
+
     rows = [row for _, _, row in engines_rows]
-    stat, cont_sync, cont, paged, paged_full, paged_probe = rows
+    (stat, cont_sync, cont, paged, paged_full, paged_probe, tiered,
+     pre_unsh, pre_sh) = rows
 
     # mesh provenance + the per-device slice of the sharded KV pool (the
     # banked-buffer accounting: what one "bank" actually holds)
@@ -216,6 +281,17 @@ def main(argv=None):
             paged["decode_tok_per_s"] /
             max(paged_full["decode_tok_per_s"], 1e-9), 2),
         "mean_decode_bucket": paged["mean_decode_bucket"],
+        # tiered pool: forced-eviction probe (device pool barely above one
+        # slot's horizon; everything else lives in the host tier)
+        "tiered_device_pages": tiered["pool_pages"],
+        "tiered_spills": tiered["pages_spilled"],
+        "tiered_restores": tiered["pages_restored"],
+        "tiered_parks": tiered["slots_parked"],
+        # prefix sharing: one 2-page prefix stored once across 2*batch slots
+        "prefix_shared_blocks": pre_sh["prefix_shared_blocks"],
+        "prefix_peak_pages": pre_sh["peak_pages_in_use"],
+        "prefix_slot_gain": round(pre_sh["peak_live_slots"] /
+                                  max(pre_unsh["peak_live_slots"], 1), 2),
         "rows": rows,
     }
     ART.mkdir(exist_ok=True)
@@ -248,6 +324,17 @@ def main(argv=None):
     print(f"decode ladder {paged['decode_buckets']}: mean bucket "
           f"{paged['mean_decode_bucket']:.1f}/{max_seq} tokens, "
           f"{summary['decode_ladder_speedup']:.2f}x vs full-capacity bucket")
+    print(f"tiered: {tiered['pool_pages']} device + "
+          f"{tiered['host_pool_pages']} host pages -> "
+          f"{tiered['pages_spilled']} spilled / "
+          f"{tiered['pages_restored']} restored, "
+          f"{tiered['slots_parked']} parks (bitwise = untiered probe)")
+    print(f"prefix sharing: {pre_sh['prefix_shared_blocks']} blocks by "
+          f"reference, peak {pre_sh['peak_pages_in_use']} pages = 1x prefix "
+          f"+ {2 * args.batch}x suffix -> peak_live "
+          f"{pre_sh['peak_live_slots']} vs {pre_unsh['peak_live_slots']} "
+          f"unshared ({summary['prefix_slot_gain']:.2f}x) at "
+          f"{share_pages} pages")
     # sanity for CI: both schedulers must have served every token requested
     assert stat["requests"] == cont["requests"] == n_req
     assert cont["tokens_out"] == stat["tokens_out"] == cont_sync["tokens_out"]
@@ -284,6 +371,30 @@ def main(argv=None):
     assert paged["mean_decode_bucket"] < max_seq, paged["mean_decode_bucket"]
     assert summary["decode_ladder_speedup"] >= 0.9, \
         summary["decode_ladder_speedup"]
+    # tiered acceptance: host offload actually happened (forced eviction on
+    # the undersized device pool) and tokens are bitwise the untiered
+    # probe's — the tier is a pure placement change for page content
+    probe_done, tiered_done = engines_rows[5][1], engines_rows[6][1]
+    for a, b in zip(probe_done, tiered_done):
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert tiered["slots_parked"] > 0 and tiered["pages_spilled"] > 0, tiered
+    assert tiered["pages_restored"] == tiered["pages_spilled"], tiered
+    # prefix acceptance: the shared engine stores the prefix ONCE (peak
+    # physical pages = 1x prefix + N x suffix horizon exactly), runs every
+    # slot live at a budget where the unshared engine cannot, and its
+    # tokens are bitwise the unshared engine's
+    unsh_done, sh_done = engines_rows[7][1], engines_rows[8][1]
+    for a, b in zip(unsh_done, sh_done):
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert pre_sh["prefix_demotions"] == 0, pre_sh
+    assert pre_sh["prefix_shared_blocks"] > 0, pre_sh
+    assert pre_sh["peak_pages_in_use"] == pre_sh["pool_pages"], pre_sh
+    assert pre_sh["peak_live_slots"] > pre_unsh["peak_live_slots"], \
+        (pre_sh["peak_live_slots"], pre_unsh["peak_live_slots"])
+    # zero-new-jit-traces under traffic holds for every warmed engine,
+    # tiered fault path and prefix verification included
+    for r in (cont, paged, paged_full, paged_probe, tiered, pre_unsh, pre_sh):
+        assert r["new_traces"] == {}, (r["scheduler"], r["new_traces"])
     return summary
 
 

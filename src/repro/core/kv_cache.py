@@ -805,6 +805,64 @@ def paged_write_rows(cache: PagedKVCache, rows_update, slots: jax.Array,
     return PagedKVCache(tuple(segments), table)
 
 
+def paged_gather_slot(cache: PagedKVCache, slot: jax.Array,
+                      page_ids: jax.Array):
+    """Read pages (+ one slot's tail) OUT of the pool — the gather half of
+    the tier path, exact inverse of `paged_write_slot`.
+
+    Returns the per-segment tuple of dicts `paged_write_slot` accepts:
+    packed/scale planes (Lseg, 1, nb, ...) gathered at `page_ids` (nb,),
+    tails (Lseg, 1, 8, Hkv, hd) sliced at `slot`. Out-of-range page ids
+    clamp to the last page — callers pad the page vector to a warmed bucket
+    width and ignore the padding entries, mirroring the drop-mode scatter
+    on the write side. The engine's TierManager numpy-ifies the result into
+    host pages; feeding it back through `paged_write_slot` at fresh page
+    ids is a bitwise round trip (int8/f32/raw-tail planes copy exactly).
+
+    Tier semantics: which of a slot's logical blocks are device- vs
+    host-resident is HOST state (the engine's per-slot page lists and
+    parked records) — the device block table only ever holds device page
+    ids, and a parked slot's row is zeroed until its restore rebuilds it.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    out = []
+    for seg in cache.segments:
+        planes = seg.as_tree()
+        ids = jnp.minimum(page_ids, planes["packed_k"].shape[1] - 1)
+        upd = {}
+        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+            upd[key] = planes[key][:, ids][:, None]  # (Lseg, 1, nb, ...)
+        for key in ("tail_k", "tail_v"):
+            upd[key] = jax.lax.dynamic_slice_in_dim(planes[key], slot, 1,
+                                                    axis=1)
+        out.append(upd)
+    return out
+
+
+def paged_rows_match(cache: PagedKVCache, rows_update, page_ids: jax.Array):
+    """Bitwise-compare pool pages against admission update rows.
+
+    `rows_update` is the (Lseg, R, nb, ...) tree a packed paged prefill
+    returns; `page_ids` (R, nb) names the candidate page per (row, block).
+    Returns an (R, nb) bool: True iff every packed int8 element AND every
+    f32 scale of the candidate page equals the row's freshly computed
+    block — the copy-on-write sharing verifier (hash-equal prefixes are
+    only shared once this says their pages are bitwise equal). Out-of-range
+    ids clamp; callers mask non-candidate entries host-side.
+    """
+    ok = jnp.ones(page_ids.shape, bool)
+    for seg, upd in zip(cache.segments, rows_update):
+        planes = seg.as_tree()
+        ids = jnp.minimum(page_ids, planes["packed_k"].shape[1] - 1)
+        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+            got = planes[key][:, ids]  # (Lseg, R, nb, ...)
+            want = upd[key].astype(planes[key].dtype)
+            eq = got == want
+            axes = tuple(a for a in range(eq.ndim) if a not in (1, 2))
+            ok = ok & jnp.all(eq, axis=axes)
+    return ok
+
+
 def paged_reset_slot(cache: PagedKVCache, slot: jax.Array) -> PagedKVCache:
     """Retire one slot: zero its tails and block-table row.
 

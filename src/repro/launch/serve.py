@@ -67,6 +67,23 @@ def main(argv=None):
     ap.add_argument("--kv-page-budget-mb", type=float, default=None,
                     help="paged KV pool sized from a byte budget instead "
                          "(pages = budget // per-plan page bytes)")
+    ap.add_argument("--host-pool-pages", type=int, default=None,
+                    help="tiered pool: host-RAM page count behind the device "
+                         "pool; cold slots' compressed pages spill there "
+                         "under page pressure and stream back before the "
+                         "slot's next attend")
+    ap.add_argument("--host-pool-mb", type=float, default=None,
+                    help="size the host tier from a byte budget instead "
+                         "(pages = budget // per-plan page bytes)")
+    ap.add_argument("--tier-watermarks", default=None,
+                    help="LOW,HIGH free-page fractions of the device pool "
+                         "(default 0.25,0.5): queued demand with free pages "
+                         "under LOW evicts cold slots until HIGH is free")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="copy-on-write prompt-prefix sharing: identical "
+                         "prompt prefixes map the same physical pages "
+                         "(content-hashed, verified bitwise on device); "
+                         "admission reserves only the unshared suffix")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prefill-buckets", default=None,
                     help="comma-separated prompt-length buckets (multiples "
@@ -142,6 +159,10 @@ def main(argv=None):
         kv_compress=args.kv_compress, plan=plan,
         temperature=args.temperature, mesh=mesh,
         pool_pages=args.kv_pool_pages, page_budget_mb=args.kv_page_budget_mb,
+        host_pool_pages=args.host_pool_pages, host_pool_mb=args.host_pool_mb,
+        tier_watermarks=tuple(float(w) for w in args.tier_watermarks.split(","))
+        if args.tier_watermarks else (0.25, 0.5),
+        prefix_sharing=args.prefix_sharing,
         prefill_buckets=buckets, aot_warmup=args.aot_warmup,
         packed_admission=not args.no_packed_admission,
         async_host=not args.sync_host,
@@ -205,6 +226,18 @@ def main(argv=None):
         mean_bucket = st["decode_bucket_tokens"] / max(st["steps"], 1)
         print(f"decode ladder {list(eng.decode_ladder.buckets)}: mean bucket "
               f"{mean_bucket:.1f} of {args.max_seq} max-seq tokens/step")
+        if sc.tiered:
+            print(f"host tier: {ps['host_pool_pages']} pages "
+                  f"({ps['host_pool_bytes']/1e6:.2f} MB), "
+                  f"spilled {ps['pages_spilled']} / restored "
+                  f"{ps['pages_restored']} pages, parked "
+                  f"{ps['slots_parked']} / resumed {ps['slots_resumed']} "
+                  f"slots, {ps['pages_host_in_use']} host pages in use")
+        if sc.prefix_sharing:
+            print(f"prefix sharing: {ps['prefix_shared_blocks']} blocks "
+                  f"admitted by reference, {ps['shared_physical_pages']} "
+                  f"physical pages currently shared, "
+                  f"{ps['prefix_demotions']} collision demotions")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens[:12]}{'...' if len(r.out_tokens) > 12 else ''}")
     return done

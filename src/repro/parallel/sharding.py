@@ -381,6 +381,23 @@ def kv_pool_specs(cfg, plan, mesh: Mesh, *, batch: int, max_seq: int,
     return cache_specs(shapes, cfg, mesh)
 
 
+def host_transfer_shardings(tree_shapes: Any, mesh: Mesh):
+    """Replicated NamedShardings for host-origin tensors entering the mesh.
+
+    The tiered page pool's host backing store lives OUTSIDE the mesh (plain
+    numpy on the serve host); when a parked slot's pages stream back, the
+    restore jit takes the numpy update tree as input and scatters it into
+    the sharded pool. Pinning the update's in_shardings to replicated makes
+    that boundary explicit and deterministic — every device receives the
+    handful of restored blocks, and the jit's `out_shardings` (the pool's
+    own NamedShardings) re-places the result on the pool's banks, so the
+    hot decode path never sees a differently-placed cache. Works for any
+    pytree: spill/restore update trees, page-id vectors, table rows.
+    """
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: rep, tree_shapes)
+
+
 def per_device_bytes(shapes: Any, specs: Any, mesh: Mesh) -> float:
     """Bytes each device holds of a pytree sharded per `specs` on `mesh`."""
     leaves = jax.tree.leaves(shapes)

@@ -69,6 +69,7 @@ from repro.models.api import ModelAPI
 from repro.parallel import mesh as mesh_lib
 from repro.parallel import sharding as sh
 from repro.serve import pipeline as pl
+from repro.serve import tiering
 
 Params = dict[str, Any]
 
@@ -351,6 +352,23 @@ class ServeConfig:
     # divisor of the bucket's block count per jit.
     decode_buckets: Any = None
     decode_tile_pages: int = 8
+    # Tiered page pool (requires the paged pool): either knob sizes a host
+    # RAM backing store (serve/tiering.py::TierManager) that cold pages
+    # spill to when the device free list runs low — the paper's off-chip
+    # DRAM tier behind the on-chip buffer, with compressed pages keeping
+    # the transfers cheap. `tier_watermarks=(low, high)` are free-page
+    # FRACTIONS of the device pool: queued demand with free pages below
+    # `low` parks cold slots (latest-admitted victims, exclusively-owned
+    # flushed pages spilled, shared pages retained) until `high` is free
+    # again; a blocked admission parks on demand regardless of the
+    # watermark. `prefix_sharing` turns on copy-on-write prompt-prefix
+    # sharing: identical prompt prefixes (chained content hash, verified
+    # bitwise on device before trust) map the same physical pages across
+    # slots, and admission reserves only the unshared suffix.
+    host_pool_pages: int | None = None
+    host_pool_mb: float | None = None
+    tier_watermarks: Any = (0.25, 0.5)
+    prefix_sharing: bool = False
 
     def resolved_plan(self) -> plan_lib.CompressionPlan:
         """The per-layer plan (scalar kv_keep is a uniform-plan shim)."""
@@ -373,6 +391,26 @@ class ServeConfig:
         if pages < 1:
             raise ValueError(
                 f"page_budget_mb={self.page_budget_mb} holds no page "
+                f"(one page = {page_b} B across {cfg.n_layers} layers)")
+        return pages
+
+    @property
+    def tiered(self) -> bool:
+        return (self.host_pool_pages is not None
+                or self.host_pool_mb is not None)
+
+    def resolved_host_pages(self, cfg) -> int:
+        """Host-tier page count: explicit, or solved from the MB budget with
+        the same per-page byte size as the device pool (host pages mirror
+        the packed/scale geometry exactly — tails are never paged)."""
+        if self.host_pool_pages is not None:
+            return int(self.host_pool_pages)
+        assert self.host_pool_mb is not None
+        page_b = self.resolved_plan().page_bytes(cfg)
+        pages = int(self.host_pool_mb * 1e6 // page_b)
+        if pages < 1:
+            raise ValueError(
+                f"host_pool_mb={self.host_pool_mb} holds no page "
                 f"(one page = {page_b} B across {cfg.n_layers} layers)")
         return pages
 
@@ -619,6 +657,27 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class _ParkedSlot:
+    """Host-side record of an evicted (parked) live slot.
+
+    `blocks[j]` carries block j's tier bit for every FLUSHED block:
+    ("host", host_page_id) for exclusively-owned pages spilled to the
+    TierManager, ("device", page_id) for shared pages that stayed
+    device-resident (their refcount includes this record's reference).
+    `token`/`pos` are the saved device row state `_apply_fix` replays at
+    resume; `tails` (the raw 8-token remainder, per segment) is filled in
+    by the BackgroundWorker alongside the host copies."""
+    req: Request
+    token: int
+    pos: int
+    horizon_blocks: int           # worst-case pages to re-reserve at resume
+    shared: int                   # _slot_shared at park time
+    keys: list                    # _slot_keys at park time
+    blocks: list                  # per flushed block: (tier, id)
+    tails: Any = None
+
+
 class Engine:
     """Continuous-batching request server over a shared KV pool.
 
@@ -672,6 +731,34 @@ class Engine:
             self._n_pages = sc.resolved_pool_pages(api.cfg)
             self._free_pages = list(range(self._n_pages))
             self._slot_pages: list[list[int]] = [[] for _ in range(batch)]
+            # copy-on-write sharing makes a free-list entry a refcount-zero
+            # page rather than a never-referenced one; every release goes
+            # through _release_page_list so a page frees exactly once, when
+            # its LAST reference drops
+            self._page_refs = np.zeros(self._n_pages, np.int64)
+            self._slot_shared = [0] * batch   # leading shared blocks per slot
+            self._slot_keys: list[list[bytes]] = [[] for _ in range(batch)]
+            self._slot_seq = [0] * batch      # admission order (victim pick)
+            self._admit_seq = 0
+        self._parked: dict[int, _ParkedSlot] = {}
+        self._park_order: list[int] = []
+        self._tier = None
+        self._prefix = None
+        self.paranoid_pool_checks = False
+        if (sc.tiered or sc.prefix_sharing) and not self.paged:
+            raise ValueError("host_pool_pages/host_pool_mb/prefix_sharing "
+                             "require the paged KV pool (set pool_pages or "
+                             "page_budget_mb)")
+        if sc.tiered:
+            self._tier = tiering.TierManager(
+                jax.eval_shape(lambda: cache_init(batch)),
+                sc.resolved_host_pages(api.cfg))
+            lo, hi = sc.tier_watermarks
+            assert 0.0 <= float(lo) <= float(hi) <= 1.0, sc.tier_watermarks
+            self._wm_low = int(float(lo) * self._n_pages)
+            self._wm_high = max(int(float(hi) * self._n_pages), self._wm_low)
+        if sc.prefix_sharing:
+            self._prefix = tiering.PrefixIndex()
         self._cache_init_raw = cache_init  # un-jitted: pool accounting
         self.trace_counts = pl.TraceCounts()
         tc = self.trace_counts
@@ -711,6 +798,14 @@ class Engine:
                 self._write = jax.jit(write_fn)
                 self._reset = jax.jit(reset_fn)
                 self._fix = jax.jit(fix_fn)
+                if self._tier is not None:
+                    self._spill = jax.jit(
+                        pl.counting("spill", tc, kvc.paged_gather_slot))
+                    self._restore = jax.jit(
+                        pl.counting("restore", tc, kvc.paged_write_slot))
+                if self._prefix is not None:
+                    self._match = jax.jit(
+                        pl.counting("match", tc, kvc.paged_rows_match))
             else:
                 shd = serve_shardings(api, params, sc, batch, cache_init)
                 # place params once; the decode jit pins the same shardings,
@@ -749,6 +844,30 @@ class Engine:
                 self._cache_init = lambda b: pool_init()
                 self._write = jax.jit(write_fn, out_shardings=shd["pool"])
                 self._reset = jax.jit(reset_fn, out_shardings=shd["pool"])
+                if self._tier is not None:
+                    # host pages live OUTSIDE the mesh: the spill gather
+                    # lands replicated (one host copy reads it whole), and
+                    # the restore takes the replicated host tree back in
+                    # with the pool's NamedSharding pinned on the output
+                    upd_shapes = jax.eval_shape(
+                        kvc.paged_gather_slot,
+                        jax.eval_shape(lambda: cache_init(batch)),
+                        jax.ShapeDtypeStruct((), jnp.int32),
+                        jax.ShapeDtypeStruct((1,), jnp.int32))
+                    rep_upd = sh.host_transfer_shardings(upd_shapes, sc.mesh)
+                    self._spill = jax.jit(
+                        pl.counting("spill", tc, kvc.paged_gather_slot),
+                        in_shardings=(shd["pool"], shd["rep"], shd["rep"]),
+                        out_shardings=rep_upd)
+                    self._restore = jax.jit(
+                        pl.counting("restore", tc, kvc.paged_write_slot),
+                        in_shardings=(shd["pool"], rep_upd, shd["rep"],
+                                      shd["rep"], shd["rep"]),
+                        out_shardings=shd["pool"])
+                if self._prefix is not None:
+                    self._match = jax.jit(
+                        pl.counting("match", tc, kvc.paged_rows_match),
+                        out_shardings=shd["rep"])
                 self._fix = jax.jit(
                     fix_fn,
                     in_shardings=(shd["vec"], shd["vec"], shd["rep"],
@@ -784,7 +903,10 @@ class Engine:
                       "warmup_s": 0.0,
                       "slot_steps_live": 0, "slot_steps_total": 0,
                       "peak_live_slots": 0, "admit_blocked_on_pages": 0,
-                      "peak_pages_in_use": 0, "decode_bucket_tokens": 0}
+                      "peak_pages_in_use": 0, "decode_bucket_tokens": 0,
+                      "pages_spilled": 0, "pages_restored": 0,
+                      "slots_parked": 0, "slots_resumed": 0,
+                      "prefix_shared_blocks": 0, "prefix_demotions": 0}
         self._lat = {"ttft_s": [], "itl_s": []}
         self._staged = []
         self._worker = None
@@ -839,13 +961,84 @@ class Engine:
                "kv_bytes_per_device": per_device,
                "slots_per_gb": self.batch / max(total / 1e9, 1e-12)}
         if self.paged:
+            if self._worker is not None:
+                # settle in-flight retirements/spills so the counts (and
+                # the invariant check below) see a quiescent allocator
+                self._worker.flush()
+            refs = self._page_refs
             out.update(
                 pool_pages=self._n_pages,
                 page_bytes=self.sc.resolved_plan().page_bytes(self.api.cfg),
                 pages_in_use=self._n_pages - len(self._free_pages),
+                pages_device_free=len(self._free_pages),
                 peak_pages_in_use=self.stats["peak_pages_in_use"],
+                shared_physical_pages=int((refs > 1).sum()),
+                shared_extra_refs=int((refs[refs > 1] - 1).sum()),
+                prefix_shared_blocks=self.stats["prefix_shared_blocks"],
+                prefix_demotions=self.stats["prefix_demotions"],
             )
+            if self._tier is not None:
+                out.update(
+                    host_pool_pages=self._tier.host_pages,
+                    host_pool_bytes=self._tier.nbytes(),
+                    pages_host_in_use=self._tier.in_use,
+                    pages_host_free=self._tier.free_pages,
+                    pages_spilled=self.stats["pages_spilled"],
+                    pages_restored=self.stats["pages_restored"],
+                    slots_parked=self.stats["slots_parked"],
+                    slots_resumed=self.stats["slots_resumed"],
+                )
+            self.check_page_invariants()
         return out
+
+    def check_page_invariants(self) -> None:
+        """Allocator conservation — the tiered pool's ledger must balance:
+
+            device_in_use + device_free + host_resident + host_free
+                == pool_pages + host_pool_pages
+
+        refcount-weighted on the device side: every free-list page has
+        refcount 0, every held page's refcount equals the number of (slot,
+        block) references to it across live, staged, and parked slots, and
+        every host page is either free or holds exactly one parked block.
+        Pure host-list arithmetic (no device sync); runs on every
+        kv_pool_stats() call and — with `paranoid_pool_checks` set — after
+        every admission flush and retirement, which is how the tests catch
+        the page-leak bug class the PR-5 rollback fix closed."""
+        if not self.paged:
+            return
+        free = self._free_pages
+        assert len(free) == len(set(free)), "free list has duplicates"
+        held = collections.Counter()
+        host_held: list[int] = []
+        for pages in self._slot_pages:
+            held.update(pages)
+        for rec in self._parked.values():
+            for tier, ref in rec.blocks:
+                if tier == "host":
+                    host_held.append(ref)
+                else:
+                    held.update([ref])
+        refs = self._page_refs
+        for p in free:
+            assert refs[p] == 0, f"free page {p} has refcount {int(refs[p])}"
+        overlap = set(free) & set(held)
+        assert not overlap, f"pages both free and held: {sorted(overlap)}"
+        for p, n in held.items():
+            assert refs[p] == n, \
+                f"page {p}: refcount {int(refs[p])} != {n} references"
+        assert int((refs > 0).sum()) == len(held)
+        assert int(refs.sum()) == sum(held.values())
+        assert len(free) + len(held) == self._n_pages, \
+            (len(free), len(held), self._n_pages)
+        if self._tier is not None:
+            assert len(host_held) == len(set(host_held)), \
+                "host page referenced by two parked blocks"
+            assert self._tier.in_use == len(host_held), \
+                (self._tier.in_use, sorted(host_held))
+            assert (len(held) + len(free) + len(host_held)
+                    + self._tier.free_pages
+                    == self._n_pages + self._tier.host_pages)
 
     # ------------------------------------------------------------------ API
     def generate(self, requests: list[Request]) -> list[Request]:
@@ -889,9 +1082,72 @@ class Engine:
         horizon = min(len(r.prompt) + r.max_new - 1, self.sc.max_seq)
         return horizon // kvc.BLOCK
 
+    def _release_page_list(self, pages) -> None:
+        """Drop one reference per listed page; a page rejoins the free list
+        (and leaves the prefix index) when its LAST reference drops — the
+        copy-on-write half of prefix sharing. Append-in-list-order keeps
+        the free-list sequence identical to the pre-refcount `extend` when
+        nothing is shared, so page-id determinism is preserved. Runs on
+        the serve thread or the worker; the engine's flush-before-reserve
+        barrier keeps the two from interleaving with allocation."""
+        for p in pages:
+            n = self._page_refs[p] = self._page_refs[p] - 1
+            assert n >= 0, f"page {p} over-released"
+            if n == 0:
+                self._free_pages.append(p)
+                if self._prefix is not None:
+                    self._prefix.drop_page(p)
+
     def _release_pages(self, slot: int) -> None:
-        self._free_pages.extend(self._slot_pages[slot])
-        self._slot_pages[slot] = []
+        pages, self._slot_pages[slot] = self._slot_pages[slot], []
+        self._slot_shared[slot] = 0
+        self._slot_keys[slot] = []
+        self._release_page_list(pages)
+
+    def _reserve_pages(self, r: Request, slot: int) -> bool:
+        """Reserve `slot`'s worst-case page horizon for `r`; False = blocked
+        on free pages (admission keeps the request queued, FCFS).
+
+        With prefix sharing on, the longest leading run of FULL prompt
+        blocks whose content keys already name device-resident pages is
+        mapped by reference — those pages' refcounts bump and only the
+        unshared suffix draws from the free list, which is the
+        admission-cost collapse for common-system-prompt traffic. The
+        shared run is only a candidate here: `_flush_admissions` verifies
+        it bitwise on device and demotes any mismatch to fresh pages."""
+        horizon = self._pages_needed(r)
+        if horizon > self._n_pages:
+            raise ValueError(
+                f"request {r.uid} needs {horizon} pages > pool of "
+                f"{self._n_pages} (raise pool_pages/page_budget_mb"
+                " or lower max_new)")
+        shared: list[int] = []
+        keys: list[bytes] = []
+        if self._prefix is not None:
+            keys = self._prefix.key_fn(np.asarray(r.prompt, np.int32))
+            shared = self._prefix.lookup_run(keys)[:horizon]
+        if horizon - len(shared) > len(self._free_pages):
+            return False
+        own = [self._free_pages.pop() for _ in range(horizon - len(shared))]
+        for p in shared:
+            self._page_refs[p] += 1
+        for p in own:
+            assert self._page_refs[p] == 0, f"free page {p} had references"
+            self._page_refs[p] = 1
+        self._slot_pages[slot] = shared + own
+        self._slot_shared[slot] = len(shared)
+        self._slot_keys[slot] = keys
+        if self._prefix is not None:
+            # register own FULL prompt blocks immediately so later rows of
+            # the same admission group already share them (still verified
+            # bitwise post-splice like any other candidate)
+            for j in range(len(shared), len(r.prompt) // kvc.BLOCK):
+                self._prefix.register(keys[j], self._slot_pages[slot][j])
+            self.stats["prefix_shared_blocks"] += len(shared)
+        used = self._n_pages - len(self._free_pages)
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], used)
+        return True
 
     def _admit(self, r: Request, cache, slot: int):
         """Stage one request into `slot` (pages already reserved): bucket
@@ -937,10 +1193,19 @@ class Engine:
             for j, (r, slot, plen, _) in enumerate(staged):
                 pb = plen // kvc.BLOCK
                 pages = self._slot_pages[slot]
-                page_ids[j, :pb] = pages[:pb]
+                # shared prefix blocks are NOT rewritten (their ids stay
+                # out-of-range so the scatter drops them) — that is the
+                # copy-on-write contract; the table still maps them so the
+                # attend reads the shared pages
+                sh_n = self._slot_shared[slot]
+                page_ids[j, sh_n:pb] = pages[sh_n:pb]
                 table[j, :pb] = pages[:pb]
             cache = self._write(cache, rows_cache, jnp.asarray(slot_ids),
                                 jnp.asarray(page_ids), jnp.asarray(table))
+            if self._prefix is not None \
+                    and any(self._slot_shared[s] for (_, s, _, _) in staged):
+                cache = self._verify_shared(cache, staged, rows_cache,
+                                            rows, bucket, slot_ids)
         else:
             cache = self._write(cache, rows_cache, jnp.asarray(slot_ids))
         firsts = np.asarray(first)
@@ -957,10 +1222,16 @@ class Engine:
                 cache = self._reset(cache, jnp.int32(slot))
                 if self.paged:
                     pages, self._slot_pages[slot] = self._slot_pages[slot], []
+                    self._slot_shared[slot] = 0
+                    self._slot_keys[slot] = []
             else:
                 self._slots[slot] = r
                 self._pos[slot] = plen
                 self._nout[slot] = 1
+                if self.paged:
+                    self._admit_seq += 1
+                    self._slot_seq[slot] = self._admit_seq
+                    self._last_tok[slot] = tok
                 fix_i.append(slot)
                 fix_t.append(tok)
                 fix_p.append(plen)
@@ -969,6 +1240,61 @@ class Engine:
                 pages, slot, t_emit))
         if fix_i:
             self._apply_fix(fix_i, fix_t, fix_p)
+        if self.paged and self.paranoid_pool_checks:
+            self._worker.flush()
+            self.check_page_invariants()
+        return cache
+
+    def _verify_shared(self, cache, staged, rows_cache, rows, bucket,
+                       slot_ids):
+        """Bitwise-verify every shared-prefix candidate block on device and
+        demote mismatches (copy-on-write fallback).
+
+        Each admitted row computed its own K/V for its whole prompt, so the
+        shared pages it was mapped to must equal the row's freshly computed
+        blocks exactly — `paged_rows_match` compares on device without
+        pulling page planes to the host. A mismatch (hash collision, by
+        construction) demotes that block and every later shared block to
+        fresh pages via ONE corrective splice at the same warmed
+        rows x bucket shape, so sharing can only ever be a storage win,
+        never an output change — and never a new jit trace."""
+        nbv = bucket // kvc.BLOCK
+        ver_ids = np.full((rows, nbv), self._n_pages, np.int32)
+        for j, (r, slot, plen, _) in enumerate(staged):
+            sh_n = self._slot_shared[slot]
+            ver_ids[j, :sh_n] = self._slot_pages[slot][:sh_n]
+        ok = np.asarray(self._match(cache, rows_cache, jnp.asarray(ver_ids)))
+        page2 = np.full((rows, nbv), self._n_pages, np.int32)
+        table2 = np.zeros((rows, self.sc.max_seq // kvc.BLOCK), np.int32)
+        dirty = False
+        for j, (r, slot, plen, _) in enumerate(staged):
+            sh_n = self._slot_shared[slot]
+            bad = [jj for jj in range(sh_n) if not ok[j, jj]]
+            if bad:
+                pages = self._slot_pages[slot]
+                for jj in range(bad[0], sh_n):
+                    if not self._free_pages:
+                        raise RuntimeError(
+                            "prefix-share demotion needs a free page and "
+                            "the pool is empty — raise pool_pages")
+                    old = pages[jj]
+                    new = self._free_pages.pop()
+                    self._release_page_list([old])
+                    assert self._page_refs[new] == 0, new
+                    self._page_refs[new] = 1
+                    pages[jj] = new
+                    page2[j, jj] = new
+                self._slot_shared[slot] = bad[0]
+                self.stats["prefix_demotions"] += sh_n - bad[0]
+                dirty = True
+            pb = plen // kvc.BLOCK
+            table2[j, :pb] = self._slot_pages[slot][:pb]
+        if dirty:
+            cache = self._write(cache, rows_cache, jnp.asarray(slot_ids),
+                                jnp.asarray(page2), jnp.asarray(table2))
+            used = self._n_pages - len(self._free_pages)
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], used)
         return cache
 
     def _bk_first(self, r, tok, ttft, finished, pages, slot, t_emit):
@@ -979,7 +1305,7 @@ class Engine:
         if finished:
             r.done = True
             if pages:
-                self._free_pages.extend(pages)
+                self._release_page_list(pages)
 
     def _bk_step(self, emitted, retired, t_emit):
         """Background bookkeeping for one processed decode step: token
@@ -993,7 +1319,7 @@ class Engine:
         for r, pages in retired:
             r.done = True
             if pages:
-                self._free_pages.extend(pages)
+                self._release_page_list(pages)
 
     def _apply_fix(self, idx, tok_vals, pos_vals):
         """Scatter admission/retirement corrections into the device-resident
@@ -1014,36 +1340,46 @@ class Engine:
         """Fill free slots from the queue (paged pools additionally gate on
         free pages, FCFS) and flush the staged group through one packed
         prefill (`packed_admission=False` caps the group at 1 — the serial
-        baseline)."""
+        baseline). A tiered pool first resumes parked slots — their
+        requests are older than anything still queued, so they outrank new
+        admissions — then runs the watermark policy: queued demand with
+        free pages under the low mark parks cold slots until the high mark
+        is free again, and a still-blocked reservation parks on demand."""
         group_cap = self.batch if self.sc.packed_admission else 1
-        if self.paged and self._qi < len(queue) \
-                and any(s is None for s in self._slots):
+        want = self._qi < len(queue) and any(s is None for s in self._slots)
+        if self.paged and (want or self._parked):
             # deterministic allocator: apply every pending retirement's page
-            # return before reserving, so the free-list sequence (and thus
-            # every page id ever issued) matches the synchronous loop
+            # return (and land every spill's host copy) before reserving,
+            # so the free-list sequence (and thus every page id ever
+            # issued) matches the synchronous loop
             self._worker.flush()
+        resumed: tuple | list = ()
+        if self._tier is not None:
+            cache, resumed = self._resume_parked(cache)
+            if want and len(self._free_pages) < self._wm_low:
+                cache = self._evict_until(self._wm_high, cache,
+                                          protect=resumed)
         for i in range(self.batch):
-            if self._slots[i] is not None or self._qi >= len(queue):
+            if self._slots[i] is not None or i in self._parked \
+                    or self._qi >= len(queue):
                 continue
             r = queue[self._qi]
             if self.paged:
-                need = self._pages_needed(r)
-                if need > self._n_pages:
-                    raise ValueError(
-                        f"request {r.uid} needs {need} pages > pool of "
-                        f"{self._n_pages} (raise pool_pages/page_budget_mb"
-                        " or lower max_new)")
-                if need > len(self._free_pages):
+                ok = self._reserve_pages(r, i)
+                if not ok and self._tier is not None:
+                    # blocked reservation: evict cold slots on demand and
+                    # retry once (never past resumed slots — re-parking a
+                    # slot that just streamed back would thrash)
+                    cache = self._evict_until(
+                        max(self._pages_needed(r), self._wm_high), cache,
+                        protect=resumed)
+                    ok = self._reserve_pages(r, i)
+                if not ok:
                     # blocked on pages, not slots: keep decoding; the next
                     # retirement frees pages and re-tries (FCFS, so later
                     # small requests don't starve this one)
                     self.stats["admit_blocked_on_pages"] += 1
                     break
-                self._slot_pages[i] = [self._free_pages.pop()
-                                       for _ in range(need)]
-                used = self._n_pages - len(self._free_pages)
-                self.stats["peak_pages_in_use"] = max(
-                    self.stats["peak_pages_in_use"], used)
             self._qi += 1
             try:
                 cache = self._admit(r, cache, i)
@@ -1059,6 +1395,165 @@ class Engine:
             if len(self._staged) >= group_cap:
                 cache = self._flush_admissions(cache)
         return self._flush_admissions(cache)
+
+    # ------------------------------------------------------- tiered pool
+    def _drain_pending(self, cache):
+        """Retire the async pipeline: process every in-flight decode step
+        and run all queued bookkeeping. Afterwards `_pos == _devpos` for
+        every slot (no speculative step is outstanding) and the free list
+        reflects every retirement — the quiescent state parking needs."""
+        while self._pending:
+            fut, plive = self._pending.popleft()
+            cache = self._process(fut, plive, cache)
+        self._worker.flush()
+        return cache
+
+    def _park_slot(self, v: int, cache):
+        """Evict live slot `v` to the host tier. Returns (parked?, cache);
+        False = the host pool can't hold its exclusive pages.
+
+        The caller drained the pipeline, so `_pos[v]` counts every emitted
+        token and the device tail holds exactly the slot's raw remainder.
+        Exclusively-owned flushed pages are gathered in ONE bucketed jit
+        (`paged_gather_slot`, tail rows ride along) and copied host-side on
+        the BackgroundWorker — overlapped with whatever decodes next;
+        shared pages (refcount > 1) stay device-resident, referenced by the
+        parked record. The gather consumed the OLD cache value (XLA buffers
+        are immutable), so the spilled device pages return to the free list
+        immediately — a later admission can reuse them before the host copy
+        lands. Unflushed reserved pages simply roll back; the slot's table
+        row and tail zero out, and its batch row leaves the live set."""
+        pages = self._slot_pages[v]
+        nb = int(self._pos[v]) // kvc.BLOCK
+        spill = [(j, pages[j]) for j in range(nb)
+                 if self._page_refs[pages[j]] == 1]
+        if self._tier.free_pages < len(spill):
+            return False, cache
+        rec = _ParkedSlot(
+            req=self._slots[v], token=int(self._last_tok[v]),
+            pos=int(self._pos[v]), horizon_blocks=len(pages),
+            shared=self._slot_shared[v], keys=self._slot_keys[v],
+            blocks=[("device", pages[j]) for j in range(nb)])
+        nbkt = self.ladder.bucket_for(max(len(spill), 1) * kvc.BLOCK) \
+            // kvc.BLOCK
+        ids = np.full(nbkt, self._n_pages, np.int32)
+        ids[:len(spill)] = [p for _, p in spill]
+        upd = self._spill(cache, jnp.int32(v), jnp.asarray(ids))
+        host_ids = self._tier.alloc(len(spill))
+        for (j, _), hid in zip(spill, host_ids):
+            rec.blocks[j] = ("host", hid)
+        self._worker.submit(functools.partial(
+            self._bk_spill, rec, host_ids, upd))
+        cache = self._reset(cache, jnp.int32(v))
+        for _, p in spill:
+            self._page_refs[p] = 0
+            self._free_pages.append(p)
+            if self._prefix is not None:
+                self._prefix.drop_page(p)
+        future = pages[nb:]
+        self._slot_pages[v] = []
+        self._slot_shared[v] = 0
+        self._slot_keys[v] = []
+        self._release_page_list(future)
+        self._parked[v] = rec
+        self._park_order.append(v)
+        self.stats["pages_spilled"] += len(spill)
+        self.stats["slots_parked"] += 1
+        return True, cache
+
+    def _bk_spill(self, rec, host_ids, upd):
+        """Worker half of a park: pull the gathered pages+tail to the host
+        and file them (the flush-before-reserve barrier orders this before
+        any read_back)."""
+        upd = jax.tree.map(np.asarray, upd)
+        self._tier.stage_out(host_ids, upd)
+        rec.tails = [{k: seg[k] for k in tiering.TAIL_KEYS} for seg in upd]
+
+    def _resume_parked(self, cache):
+        """Stream parked slots back in park order (FIFO — their requests
+        are the oldest in the system). Each resume re-reserves the slot's
+        worst-case horizon, splices host pages + the saved tail back in ONE
+        bucketed `paged_write_slot`, rebuilds the table row, and replays
+        token/pos via `_apply_fix`, so the next dispatch continues the
+        request bitwise where it parked. Caller flushed the worker, so
+        every staged-out byte is already in the host store."""
+        resumed = []
+        while self._park_order:
+            v = self._park_order[0]
+            rec = self._parked[v]
+            n_host = sum(1 for tier, _ in rec.blocks if tier == "host")
+            need = n_host + (rec.horizon_blocks - len(rec.blocks))
+            if need > len(self._free_pages):
+                break  # strict FIFO: later parked slots wait their turn
+            nb = len(rec.blocks)
+            nbkt = self.ladder.bucket_for(max(nb, 1) * kvc.BLOCK) // kvc.BLOCK
+            page_ids = np.full(nbkt, self._n_pages, np.int32)
+            entries, host_ids, slot_pages = [], [], []
+            for j, (tier, ref) in enumerate(rec.blocks):
+                if tier == "host":
+                    p = self._free_pages.pop()
+                    assert self._page_refs[p] == 0, p
+                    self._page_refs[p] = 1
+                    page_ids[j] = p
+                    entries.append((j, ref))
+                    host_ids.append(ref)
+                    slot_pages.append(p)
+                else:  # stayed device-resident (shared); ref carried over
+                    slot_pages.append(ref)
+            for _ in range(rec.horizon_blocks - nb):
+                p = self._free_pages.pop()
+                self._page_refs[p] = 1
+                slot_pages.append(p)
+            upd = self._tier.read_back(entries, nbkt)
+            upd = [dict(seg, **tails)
+                   for seg, tails in zip(upd, rec.tails)]
+            table_row = np.zeros(self.sc.max_seq // kvc.BLOCK, np.int32)
+            table_row[:nb] = slot_pages[:nb]
+            cache = self._restore(cache, upd, jnp.int32(v),
+                                  jnp.asarray(page_ids),
+                                  jnp.asarray(table_row))
+            self._tier.release(host_ids)
+            self._slot_pages[v] = slot_pages
+            self._slot_shared[v] = rec.shared
+            self._slot_keys[v] = rec.keys
+            if self._prefix is not None:
+                for j, key in enumerate(rec.keys[:nb]):
+                    self._prefix.register(key, slot_pages[j])
+            self._apply_fix([v], [rec.token], [rec.pos])
+            del self._parked[v]
+            self._park_order.pop(0)
+            resumed.append(v)
+            self.stats["pages_restored"] += n_host
+            self.stats["slots_resumed"] += 1
+            used = self._n_pages - len(self._free_pages)
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], used)
+        return cache, resumed
+
+    def _evict_until(self, target_free: int, cache, protect=()):
+        """Watermark eviction: park victims until `target_free` device
+        pages are free, victims run out, or the host pool fills. Victims
+        are live, unparked, unprotected slots, LATEST admission first —
+        the oldest requests are closest to retiring on their own, so the
+        newest slot's pages are the coldest bet. Each park drains the
+        one-step-deep pipeline first (the spill gather must see a
+        quiescent row)."""
+        tried = set(protect)
+        while len(self._free_pages) < target_free:
+            victims = [i for i in range(self.batch)
+                       if self._slots[i] is not None
+                       and i not in self._parked and i not in tried]
+            if not victims:
+                break
+            v = max(victims, key=lambda i: self._slot_seq[i])
+            tried.add(v)
+            cache = self._drain_pending(cache)
+            if self._slots[v] is None:
+                continue  # retired while draining — its pages came back free
+            ok, cache = self._park_slot(v, cache)
+            if not ok:
+                break  # host pool exhausted — stop evicting
+        return cache
 
     def _dispatch(self, cache, live):
         """Issue one fused decode step; token/pos stay on device."""
@@ -1085,9 +1580,19 @@ class Engine:
             fp = np.full(self.batch, self._n_pages, np.int32)
             for i in live:
                 p = int(self._devpos[i])
+                blk = p // kvc.BLOCK
                 if p % kvc.BLOCK == kvc.BLOCK - 1 \
-                        and p // kvc.BLOCK < len(self._slot_pages[i]):
-                    fp[i] = self._slot_pages[i][p // kvc.BLOCK]
+                        and blk < len(self._slot_pages[i]):
+                    page = self._slot_pages[i][blk]
+                    if self._prefix is not None:
+                        # copy-on-write guarantee: decode only ever flushes
+                        # PAST the shared prefix, into a page this slot
+                        # owns exclusively — a write to a shared page is
+                        # structurally impossible, asserted here
+                        assert blk >= self._slot_shared[i] \
+                            and self._page_refs[page] == 1, \
+                            (i, blk, page, int(self._page_refs[page]))
+                    fp[i] = page
             args.append(jnp.asarray(fp))
         if self.sc.temperature > 0.0:
             self.rng, sub = jax.random.split(self.rng)
@@ -1121,6 +1626,8 @@ class Engine:
             self._pos[i] += 1
             self.stats["tokens_out"] += 1
             emitted.append((r, tok, i))
+            if self.paged:
+                self._last_tok[i] = tok  # park/resume replays this
             if tok == self.sc.eos_id or self._nout[i] >= r.max_new \
                     or self._pos[i] >= self.sc.max_seq:
                 self._slots[i] = None  # retire; slot re-admits next round
@@ -1130,6 +1637,8 @@ class Engine:
                 pages = None
                 if self.paged:
                     pages, self._slot_pages[i] = self._slot_pages[i], []
+                    self._slot_shared[i] = 0
+                    self._slot_keys[i] = []
                 retired.append((r, pages))
                 fix_i.append(i)
         if emitted:
@@ -1137,6 +1646,9 @@ class Engine:
                 self._bk_step, emitted, retired, t_emit))
         if fix_i:
             self._apply_fix(fix_i, [0] * len(fix_i), [0] * len(fix_i))
+            if self.paged and self.paranoid_pool_checks:
+                self._worker.flush()
+                self.check_page_invariants()
         return cache
 
     def _run_continuous(self, queue: list[Request]) -> None:
@@ -1146,6 +1658,7 @@ class Engine:
         self._nout = np.zeros(b, np.int64)     # tokens emitted per slot
         self._devpos = np.zeros(b, np.int64)   # device pos mirror (see _dispatch)
         self._last_emit = np.zeros(b)
+        self._last_tok = np.zeros(b, np.int64)  # last emitted token per slot
         self._tok_dev = jnp.zeros((b,), jnp.int32)
         self._pos_dev = jnp.zeros((b,), jnp.int32)
         self._staged = []
@@ -1158,17 +1671,36 @@ class Engine:
         # tail/table/pages, all reset or overwritten before anything reads
         # them, and its token is discarded in _process.
         depth = 1 if self.sc.async_host else 0
-        pending: collections.deque = collections.deque()
+        self._pending = pending = collections.deque()
         self._worker = pl.BackgroundWorker()
+        idle_spins, last_state = 0, None
         try:
             while True:
                 cache = self._admit_free_slots(queue, cache)
+                # parked slots keep their Request in _slots (the slot stays
+                # reserved for them) but leave the live set: their batch
+                # row decodes garbage that is never read, and their pages
+                # are host-side until resume
                 live = [(i, r) for i, r in enumerate(self._slots)
-                        if r is not None]
+                        if r is not None and i not in self._parked]
                 if not live and not pending:
-                    if self._qi >= len(queue):
+                    if self._qi >= len(queue) and not self._parked:
                         break
-                    continue  # everything retired at admission; admit more
+                    # everything retired at admission (or only parked slots
+                    # remain); admit/resume more. Guard the spin: a parked
+                    # slot that can never resume would otherwise loop here
+                    # forever.
+                    state = (self._qi, len(self._parked),
+                             len(self._free_pages) if self.paged else 0)
+                    idle_spins = idle_spins + 1 if state == last_state else 0
+                    last_state = state
+                    if idle_spins > 2 * self.batch + 4:
+                        raise RuntimeError(
+                            "serve loop wedged: no live slots and no "
+                            f"progress (parked={sorted(self._parked)}, "
+                            f"qi={self._qi}/{len(queue)})")
+                    continue
+                idle_spins, last_state = 0, None
                 if live:
                     self.stats["peak_live_slots"] = max(
                         self.stats["peak_live_slots"], len(live))

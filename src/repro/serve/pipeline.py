@@ -295,6 +295,10 @@ def warmup_engine(engine) -> float:
                                       page_ids, table_rows)
             else:
                 cache = engine._write(cache, slot_cache, drop_slots)
+            if engine.paged and engine._prefix is not None:
+                # prefix verification runs at every admission shape
+                engine._match(cache, slot_cache,
+                              page_ids).block_until_ready()
             first.block_until_ready()
     # decode + slot lifecycle steps.  A paged engine owns one decode jit
     # per ladder bucket (static table-slice width) — warm every one; the
@@ -309,6 +313,21 @@ def warmup_engine(engine) -> float:
             tok, pos1, cache = fn(*step_args)
     else:
         tok, pos1, cache = engine._decode(*step_args)
+    if engine.paged and engine._tier is not None:
+        # tier fault path: one spill gather + one restore splice per
+        # prefill-ladder width, driven EXACTLY as the engine issues them at
+        # park/resume time — numpy host trees in (host pages live outside
+        # any mesh), pool-sharded cache out — so a tiered engine never
+        # compiles under traffic either. All page ids are out-of-range:
+        # the warmup restore writes nothing.
+        for bucket in ladder.buckets:
+            nbkt = bucket // BLOCK
+            ids = np.full((nbkt,), engine._n_pages, np.int32)
+            upd = engine._spill(cache, jnp.int32(0), jnp.asarray(ids))
+            upd = jax.tree.map(np.asarray, upd)
+            cache = engine._restore(
+                cache, upd, jnp.int32(0), jnp.asarray(ids),
+                jnp.asarray(np.zeros((nb_table,), np.int32)))
     cache = engine._reset(cache, jnp.int32(0))
     drop_idx = jnp.full((engine.batch,), engine.batch, jnp.int32)
     tok, pos1 = engine._fix(tok, pos1, drop_idx, zeros_b, zeros_b)

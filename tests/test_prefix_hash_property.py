@@ -1,0 +1,77 @@
+"""Property tests for the prefix-sharing content hash (hypothesis).
+
+The sharing contract rests on `tiering.prefix_block_keys` being a pure
+chained function of the prompt TOKENS: key j commits to tokens[0:8(j+1)]
+and to nothing else — not the admission bucket the prompt is padded to,
+not the batch row it lands in, not trailing partial-block tokens. These
+properties are what make "same key => same K/V" sound (up to hash
+collision, which the engine closes by verifying candidate pages bitwise
+on device — pinned in test_tiered_pool.py's collision test).
+
+A hypothesis-free mirror of the core properties runs unconditionally in
+test_tiered_pool.py, so CI without hypothesis still covers them.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import tiering
+
+tokens = st.lists(st.integers(0, 2**31 - 1), min_size=0, max_size=64)
+
+
+@settings(max_examples=200, deadline=None)
+@given(tokens)
+def test_key_count_and_determinism(toks):
+    arr = np.asarray(toks, np.int32)
+    keys = tiering.prefix_block_keys(arr)
+    assert len(keys) == len(arr) // tiering.BLOCK  # full blocks only
+    assert keys == tiering.prefix_block_keys(arr)  # pure function
+
+
+@settings(max_examples=200, deadline=None)
+@given(tokens, tokens)
+def test_padding_and_extension_invariance(toks, pad):
+    """Appending ANYTHING (bucket padding, a batch row's tail, more prompt)
+    never changes the keys of the already-complete blocks."""
+    arr = np.asarray(toks, np.int32)
+    padded = np.concatenate([arr, np.asarray(pad, np.int32)])
+    base = tiering.prefix_block_keys(arr)
+    ext = tiering.prefix_block_keys(padded)
+    assert ext[:len(base)] == base
+
+
+@settings(max_examples=200, deadline=None)
+@given(tokens.filter(lambda t: len(t) >= tiering.BLOCK),
+       st.data())
+def test_chained_keys_diverge_at_first_differing_block(toks, data):
+    """Flip one token: every key from that block ON differs (the chain
+    commits each key to the whole prefix), keys before it are untouched."""
+    arr = np.asarray(toks, np.int32)
+    nb = len(arr) // tiering.BLOCK
+    i = data.draw(st.integers(0, nb * tiering.BLOCK - 1))
+    mut = arr.copy()
+    mut[i] = mut[i] ^ 1
+    a, b = tiering.prefix_block_keys(arr), tiering.prefix_block_keys(mut)
+    blk = i // tiering.BLOCK
+    assert a[:blk] == b[:blk]
+    assert all(x != y for x, y in zip(a[blk:], b[blk:]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(tokens, tokens)
+def test_prefix_agreement_iff_leading_keys_agree(ta, tb):
+    """keys_a[j] == keys_b[j] exactly when the two prompts agree on the
+    whole prefix through block j (no collisions at 128-bit blake2b within
+    hypothesis's reach — and the engine never trusts this without a
+    device-side bitwise check anyway)."""
+    a = np.asarray(ta, np.int32)
+    b = np.asarray(tb, np.int32)
+    ka, kb = tiering.prefix_block_keys(a), tiering.prefix_block_keys(b)
+    for j in range(min(len(ka), len(kb))):
+        end = (j + 1) * tiering.BLOCK
+        same_prefix = bool(np.array_equal(a[:end], b[:end]))
+        assert (ka[j] == kb[j]) == same_prefix

@@ -84,6 +84,48 @@ def test_background_worker_order_and_error_propagation():
     assert out == []
 
 
+def test_background_worker_error_skips_queued_ops_and_poisons_submit():
+    """A failed transfer op must not let later queued ops run against the
+    broken state: everything behind the failure is skipped, and a submit
+    racing the un-surfaced error re-raises it instead of enqueueing."""
+    w = pl.BackgroundWorker()
+    ran = []
+    release = pl.threading.Event()
+    w.submit(release.wait)              # hold the queue so ordering is ours
+    w.submit(lambda: 1 / 0)             # the failing transfer op
+    w.submit(functools.partial(ran.append, "after-error"))
+    release.set()
+    w._q.join()                         # error captured, not yet surfaced
+    with pytest.raises(ZeroDivisionError):
+        w.submit(functools.partial(ran.append, "poisoned"))
+    assert ran == []                    # neither queued-behind nor poisoned ran
+    # the poisoned submit SURFACED the error (one error, one raise); the
+    # worker is usable again afterwards — pinned recovery semantics
+    w.submit(functools.partial(ran.append, "recovered"))
+    w.flush()
+    assert ran == ["recovered"]
+    w.close()
+
+
+def test_background_worker_error_surfaces_on_close():
+    """close() is a surfacing point too: a failure with no intervening
+    flush()/submit() must still fail the serve thread at teardown."""
+    w = pl.BackgroundWorker()
+    w.submit(lambda: [][1])
+    with pytest.raises(IndexError):
+        w.close()
+    # close() already joined the thread; a fresh worker is required
+    w2 = pl.BackgroundWorker()
+    boom = RuntimeError("transfer failed")
+    def fail():
+        raise boom
+    w2.submit(fail)
+    with pytest.raises(RuntimeError) as ei:
+        w2.flush()
+    assert ei.value is boom             # the op's OWN exception, unwrapped
+    w2.close()
+
+
 # ---------------------------------------------------------------------------
 # Zero compilation under traffic (the AOT warmup contract)
 # ---------------------------------------------------------------------------
