@@ -8,6 +8,7 @@ mode on CPU).  See `repro.codec.api` for the schemes and
 REPRO_CODEC_INTERPRET).
 """
 from repro.codec import dispatch
+from repro.codec import families
 from repro.codec import plan
 from repro.codec.api import (
     BLOCK,
@@ -30,6 +31,13 @@ from repro.codec.api import (
     quant_pack,
     roundtrip,
     storage_stats,
+)
+from repro.codec.families import (
+    CodecFamily,
+    PlaneSpec,
+    available_families,
+    get_family,
+    register_family,
 )
 from repro.codec.plan import CompressionPlan, LayerPolicy, as_plan
 from repro.codec.dispatch import (
@@ -65,15 +73,18 @@ def __getattr__(name):
 __all__ = [
     "BLOCK",
     "Codec",
+    "CodecFamily",
     "Compressed",
     "CompressionPlan",
     "CompressionPolicy",
     "LayerPolicy",
     "PallasBackend",
+    "PlaneSpec",
     "ReferenceBackend",
     "TruncatedCompressed",
     "as_plan",
     "available_backends",
+    "available_families",
     "compress",
     "compress_blocks",
     "compression_ratio",
@@ -81,7 +92,9 @@ __all__ = [
     "decompress",
     "decompress_blocks",
     "dispatch",
+    "families",
     "get_backend",
+    "get_family",
     "idct2",
     "paper_compress",
     "paper_decompress",
@@ -91,6 +104,7 @@ __all__ = [
     "plan",
     "quant_pack",
     "register_backend",
+    "register_family",
     "resolve_backend_name",
     "resolve_interpret",
     "roundtrip",

@@ -1,0 +1,309 @@
+"""Codec families: the declared plane tree behind every compressed KV store.
+
+A `CodecFamily` is the storage-geometry contract between the codec and every
+consumer that holds compressed blocks — the KV cache containers, the paged
+pool, the sharding rules, the tiered host mirror, and the plan's byte
+accounting.  A family declares
+
+  * its PLANE TREE: named per-block planes with dtypes and shapes
+    (`plane_specs`), from which the cache layouts derive every array they
+    allocate — dense stores prepend ``(Lseg, B, S/8, Hkv)``, the paged pool
+    ``(Lseg, P, Hkv)``, and each plane is materialized once for K and once
+    for V as ``{name}_k`` / ``{name}_v``;
+  * a lossless PACK/UNPACK seam over the quantized DCT coefficients:
+    ``pack(q, scale)`` lays int8 tile corners + per-tile scales out into the
+    declared planes, ``unpack(planes)`` reconstructs them bitwise (scales
+    may be lossy where a family declares an adaptive header, the int8
+    blocks never are — pinned by property tests);
+  * byte accounting, BOTH ways: ``analytic_tile_bytes`` is the data-
+    independent worst case the plan/pool budgets charge, and
+    ``measured_tile_bits`` is the data-dependent footprint of what a tile
+    actually stored — analytic always upper-bounds measured.
+
+Every family must declare a ``packed`` carrier plane of block shape
+``(hd/8, k, k)`` int8: fixed worst-case capacity keeps every cache shape
+static under jit (the EBPC payload is front-packed into it and its real
+length rides the ``blen`` scalar plane), and gives the containers one
+uniform plane to read pool geometry (page count, max_seq) from.
+
+Registered families:
+
+  * ``dct``      — the paper's truncated scheme exactly as before the
+                   refactor: int8 k x k corner + f32 scale. Plane names and
+                   shapes are bit-for-bit the pre-refactor layout, so the
+                   refactored path is bitwise identical (pinned in tests).
+  * ``bitplane`` — EBPC-style (arxiv 1908.11645) storage of the quantized
+                   coefficients: a 1-bit nonzero map packed 8/byte
+                   (``bpmask``), the nonzeros front-packed into the fixed
+                   carrier, and a per-tile measured length (``blen``) that
+                   agrees EXACTLY with `core.encode.rle_codec_bits` — the
+                   repo's one RLE accounting, reused, not reimplemented.
+  * ``asc``      — adaptive-scale compression (arxiv 2312.08176 flavour):
+                   the 4-byte f32 scale header is replaced by a 1-byte
+                   log2-exponent selected per block (``sexp``), trading a
+                   bounded scale error (< 2**(1/16)-1 per tile) for a
+                   smaller fixed footprint.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.codec import api as codec_api
+from repro.core import encode as encode_lib
+
+BLOCK = 8
+# f32 per-tile scale header charged by dct/bitplane (== api.TILE_HEADER_BYTES)
+SCALE_HEADER_BYTES = codec_api.TILE_HEADER_BYTES
+
+
+@dataclass(frozen=True)
+class PlaneSpec:
+    """One declared plane: cache arrays are ``prefix + block_shape``.
+
+    `block_shape` is everything after the cache's block axis prefix —
+    ``(Lseg, B, S/8, Hkv)`` dense, ``(Lseg, P, Hkv)`` paged — so its first
+    dim is the per-head tile count hd/8 and the rest are per-tile dims.
+    `tile_shape` (block_shape[1:]) is what `pack` emits per tile.
+    """
+
+    name: str
+    dtype: object
+    block_shape: tuple[int, ...]
+
+
+class CodecFamily:
+    """Base contract; subclasses fill in the plane tree and pack/unpack.
+
+    `pack`/`unpack` take/return the quantized-block form the block codec
+    (`codec.api.compress_blocks`) produces: ``q (..., k, k) int8`` with one
+    ``scale (...)`` f32 per tile, any leading dims.  They are pure layout —
+    all DCT/quantization math stays in the backend dispatch, so one fused
+    kernel serves every family.
+    """
+
+    name: str = ""
+    # only the dct layout matches what the fused pallas attend kernel reads;
+    # other families decode through the reference attend scan.
+    supports_fused_attend: bool = False
+
+    def plane_specs(self, keep: int, head_dim: int) -> tuple[PlaneSpec, ...]:
+        raise NotImplementedError
+
+    def pack(self, q, scale, keep: int) -> dict:
+        raise NotImplementedError
+
+    def unpack(self, planes: dict, keep: int):
+        raise NotImplementedError
+
+    def analytic_tile_bytes(self, keep: int) -> int:
+        """Data-independent worst-case bytes of one stored 8x8 tile
+        (headers included) — what plan budgets and pool sizing charge."""
+        raise NotImplementedError
+
+    def measured_tile_bits(self, q) -> jnp.ndarray:
+        """Measured storage bits per tile (headers included) for quantized
+        blocks ``q (..., k, k)`` -> ``(...)`` int32.  Data-dependent for
+        variable-length families; always <= 8 * analytic_tile_bytes."""
+        raise NotImplementedError
+
+    # ---- convenience entry points over the block codec ------------------
+    def compress(self, x, keep: int, backend: str | None = None) -> dict:
+        """(..., S, hd) -> planes dict (block layout, see plane_specs)."""
+        q, scale = codec_api.compress_blocks(x, keep, backend=backend)
+        return self.pack(q, scale, keep)
+
+    def decompress(self, planes: dict, keep: int, dtype=jnp.float32,
+                   backend: str | None = None):
+        q, scale = self.unpack(planes, keep)
+        return codec_api.decompress_blocks(q, scale, out_dtype=dtype,
+                                           backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# dct — the pre-refactor layout, verbatim
+# ---------------------------------------------------------------------------
+
+class DctFamily(CodecFamily):
+    name = "dct"
+    supports_fused_attend = True
+
+    def plane_specs(self, keep, head_dim):
+        nh = head_dim // BLOCK
+        return (PlaneSpec("packed", jnp.int8, (nh, keep, keep)),
+                PlaneSpec("scale", jnp.float32, (nh,)))
+
+    def pack(self, q, scale, keep):
+        return {"packed": q, "scale": scale}
+
+    def unpack(self, planes, keep):
+        return planes["packed"], planes["scale"]
+
+    def analytic_tile_bytes(self, keep):
+        return codec_api.tile_bytes(keep)
+
+    def measured_tile_bits(self, q):
+        k = q.shape[-1]
+        return jnp.full(q.shape[:-2], 8 * codec_api.tile_bytes(k), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# bitplane — EBPC-style zero-RLE accounting + bit-plane nonzero map
+# ---------------------------------------------------------------------------
+
+class BitplaneFamily(CodecFamily):
+    name = "bitplane"
+    # int8 coefficients, Eyeriss-style 5-bit saturated zero runs — the
+    # arguments `core.encode.rle_codec_bits` is called with everywhere here.
+    VALUE_BITS = 8
+    RUN_BITS = 5
+
+    @staticmethod
+    def _mask_bytes(keep):
+        return -(-(keep * keep) // 8)
+
+    def plane_specs(self, keep, head_dim):
+        nh = head_dim // BLOCK
+        return (PlaneSpec("packed", jnp.int8, (nh, keep, keep)),
+                PlaneSpec("bpmask", jnp.uint8, (nh, self._mask_bytes(keep))),
+                PlaneSpec("blen", jnp.int32, (nh,)),
+                PlaneSpec("scale", jnp.float32, (nh,)))
+
+    def pack(self, q, scale, keep):
+        kk = keep * keep
+        mb = self._mask_bytes(keep)
+        flat = q.reshape(q.shape[:-2] + (kk,))
+        mask = flat != 0
+        padded = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, mb * 8 - kk)])
+        bits = padded.reshape(padded.shape[:-1] + (mb, 8)).astype(jnp.uint8)
+        bpmask = jnp.sum(bits << jnp.arange(8, dtype=jnp.uint8), axis=-1,
+                         dtype=jnp.uint8)
+        # front-pack the nonzeros: stable sort keeps their original order,
+        # capacity stays the full kk so shapes are static under jit
+        order = jnp.argsort(~mask, axis=-1, stable=True)
+        payload = jnp.take_along_axis(flat, order, axis=-1)
+        nnz = jnp.sum(mask, axis=-1, keepdims=True)
+        payload = jnp.where(jnp.arange(kk) < nnz, payload, 0).astype(jnp.int8)
+        blen = encode_lib.rle_codec_bits_tiles(flat, self.VALUE_BITS,
+                                               self.RUN_BITS)
+        return {"packed": payload.reshape(q.shape), "bpmask": bpmask,
+                "blen": blen, "scale": scale}
+
+    def unpack(self, planes, keep):
+        kk = keep * keep
+        mb = self._mask_bytes(keep)
+        bpmask = planes["bpmask"]
+        bits = (bpmask[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+        mask = bits.reshape(bpmask.shape[:-1] + (mb * 8,))[..., :kk] != 0
+        payload = planes["packed"].reshape(mask.shape[:-1] + (kk,))
+        rank = jnp.cumsum(mask, axis=-1) - 1
+        vals = jnp.take_along_axis(payload, jnp.clip(rank, 0, kk - 1), axis=-1)
+        flat = jnp.where(mask, vals, 0).astype(jnp.int8)
+        return flat.reshape(mask.shape[:-1] + (keep, keep)), planes["scale"]
+
+    def analytic_tile_bytes(self, keep):
+        # worst case of the measured RLE stream (every coefficient non-zero:
+        # k*k tokens of run_bits+value_bits) + the f32 scale header.  This
+        # upper-bounds measured_tile_bits by construction; the static device
+        # carrier (payload + bpmask + blen) is a separate, smaller
+        # allocation accounted by the arrays themselves.
+        kk = keep * keep
+        return -(-(kk * (self.VALUE_BITS + self.RUN_BITS)) // 8) \
+            + SCALE_HEADER_BYTES
+
+    def measured_tile_bits(self, q):
+        flat = q.reshape(q.shape[:-2] + (q.shape[-2] * q.shape[-1],))
+        stream = encode_lib.rle_codec_bits_tiles(flat, self.VALUE_BITS,
+                                                 self.RUN_BITS)
+        return stream + 8 * SCALE_HEADER_BYTES
+
+
+# ---------------------------------------------------------------------------
+# asc — adaptive per-block scale exponent (1-byte header)
+# ---------------------------------------------------------------------------
+
+class AscFamily(CodecFamily):
+    name = "asc"
+    # scale' = 2 ** (sexp / 8): eighth-of-an-octave steps bound the relative
+    # scale error below 2**(1/16) - 1 (~4.4%); -128 is the reserved
+    # all-zero-tile code so empty blocks reconstruct exactly.
+    EXP_DENOM = 8
+    ZERO_CODE = -128
+
+    def plane_specs(self, keep, head_dim):
+        nh = head_dim // BLOCK
+        return (PlaneSpec("packed", jnp.int8, (nh, keep, keep)),
+                PlaneSpec("sexp", jnp.int8, (nh,)))
+
+    def pack(self, q, scale, keep):
+        e = jnp.round(jnp.log2(jnp.maximum(scale, 1e-30)) * self.EXP_DENOM)
+        sexp = jnp.where(scale > 0, jnp.clip(e, -127, 127),
+                         self.ZERO_CODE).astype(jnp.int8)
+        return {"packed": q, "sexp": sexp}
+
+    def unpack(self, planes, keep):
+        sexp = planes["sexp"]
+        scale = jnp.where(sexp == self.ZERO_CODE, 0.0,
+                          jnp.exp2(sexp.astype(jnp.float32) / self.EXP_DENOM))
+        return planes["packed"], scale
+
+    def analytic_tile_bytes(self, keep):
+        return keep * keep + 1  # int8 corner + 1-byte scale exponent
+
+    def measured_tile_bits(self, q):
+        k = q.shape[-1]
+        return jnp.full(q.shape[:-2], 8 * (k * k + 1), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FAMILIES: dict[str, CodecFamily] = {}
+_PLANE_NDIMS: dict[str, int] = {}
+
+DEFAULT_FAMILY = "dct"
+TAIL_NAMES = ("tail_k", "tail_v")  # raw per-slot scratchpad, outside families
+
+
+def register_family(family: CodecFamily) -> None:
+    """Register a family; plane names must keep a globally consistent block
+    rank (the sharding rules dispatch on name + rank, so one plane name
+    cannot mean two different layouts)."""
+    assert family.name, "family needs a name"
+    specs = family.plane_specs(BLOCK, BLOCK)
+    if not any(s.name == "packed" for s in specs):
+        raise ValueError(f"family {family.name!r} declares no 'packed' "
+                         "carrier plane")
+    for spec in specs:
+        nd = len(spec.block_shape)
+        if _PLANE_NDIMS.setdefault(spec.name, nd) != nd:
+            raise ValueError(
+                f"plane {spec.name!r} of family {family.name!r} has block "
+                f"rank {nd}, but it is already registered with rank "
+                f"{_PLANE_NDIMS[spec.name]}")
+    _FAMILIES[family.name] = family
+
+
+def get_family(name: str | None) -> CodecFamily:
+    name = DEFAULT_FAMILY if name is None else name
+    if name not in _FAMILIES:
+        raise KeyError(
+            f"unknown codec family {name!r}; have {available_families()}")
+    return _FAMILIES[name]
+
+
+def available_families() -> list[str]:
+    return sorted(_FAMILIES)
+
+
+def plane_block_ndims() -> dict[str, int]:
+    """plane base name -> block rank, across every registered family — the
+    table `parallel.sharding.cache_specs` dispatches cache planes on."""
+    return dict(_PLANE_NDIMS)
+
+
+register_family(DctFamily())
+register_family(BitplaneFamily())
+register_family(AscFamily())

@@ -46,18 +46,28 @@ class LayerPolicy:
     enabled  — False => this layer is not compressed (ActCompress saves the
                raw residual; the CNN fusion boundary passes through)
     backend  — codec backend override for this layer (None = auto dispatch)
+    codec    — codec FAMILY storing this layer's blocks (`codec.families`
+               registry: dct / bitplane / asc); decides the plane tree the
+               KV cache allocates and the per-tile byte accounting
     """
 
     keep: int = 4
     bits: int = 8
     enabled: bool = True
     backend: str | None = None
+    codec: str = "dct"
 
     def __post_init__(self):
         if not KEEP_MIN <= self.keep <= KEEP_MAX:
             raise ValueError(f"keep must be in [{KEEP_MIN}, {KEEP_MAX}], got {self.keep}")
         if not 1 <= self.bits <= 16:
             raise ValueError(f"bits must be in [1, 16], got {self.bits}")
+        from repro.codec import families as families_lib  # leaf-light import
+
+        if self.codec not in families_lib.available_families():
+            raise ValueError(
+                f"unknown codec family {self.codec!r}; have "
+                f"{families_lib.available_families()}")
 
     @property
     def kv_keep(self) -> int:
@@ -157,32 +167,45 @@ class CompressionPlan:
         return cls.from_keeps(keeps, bits=bits, backend=backend)
 
     # ----------------------------------------------------------- spec string
-    # "0-3:keep=6,4-:keep=3" — comma-separated RANGE:SETTINGS entries.
-    # RANGE: "a" (one layer), "a-b" (inclusive), "a-" (open). SETTINGS:
-    # "+"-separated keep=K / bits=B / backend=NAME / off flags.
+    # "0-3:keep=6,4-:codec=bitplane+keep=3" — comma-separated RANGE:SETTINGS
+    # entries.  RANGE: "a" (one layer), "a-b" (inclusive), "a-" (open).
+    # SETTINGS: "+"-separated keep=K / bits=B / backend=NAME / codec=FAMILY /
+    # off flags.  Parse errors name the offending token and its character
+    # position in the spec; unknown codec= names are rejected here, not at
+    # trace time.
     _RANGE = re.compile(r"^(\d+)(-(\d*))?$")
 
     @classmethod
     def from_spec(cls, spec: str) -> "CompressionPlan":
+        def fail(token: str, pos: int, why: str):
+            raise ValueError(f"bad plan spec token {token!r} at position "
+                             f"{pos} in {spec!r}: {why}")
+
         rules = []
+        cursor = 0  # character offset of the current entry in `spec`
         for entry in spec.split(","):
+            entry_pos = cursor + len(entry) - len(entry.lstrip())
+            cursor += len(entry) + 1  # past the comma
             entry = entry.strip()
             if not entry:
                 continue
             rng, sep, settings = entry.partition(":")
             m = cls._RANGE.match(rng.strip())
             if not m or not sep:
-                raise ValueError(f"bad plan spec entry {entry!r} "
-                                 "(want RANGE:SETTINGS, e.g. '0-3:keep=6')")
+                fail(entry, entry_pos,
+                     "want RANGE:SETTINGS, e.g. '0-3:keep=6'")
             start = int(m.group(1))
             if m.group(2) is None:
                 stop: int | None = start + 1
             else:
                 stop = int(m.group(3)) + 1 if m.group(3) else None
             if stop is not None and stop <= start:
-                raise ValueError(f"empty range in plan spec entry {entry!r}")
+                fail(rng.strip(), entry_pos, "empty layer range")
             kwargs: dict = {}
+            item_cursor = entry_pos + len(rng) + 1  # past the colon
             for item in settings.split("+"):
+                item_pos = item_cursor + len(item) - len(item.lstrip())
+                item_cursor += len(item) + 1  # past the plus
                 item = item.strip()
                 if not item:
                     continue
@@ -193,7 +216,8 @@ class CompressionPlan:
                 else:
                     key, eq, val = item.partition("=")
                     if not eq:
-                        raise ValueError(f"bad plan setting {item!r} in {entry!r}")
+                        fail(item, item_pos,
+                             "want KEY=VALUE or the off/on flag")
                     key = key.strip()
                     val = val.strip()
                     if key == "keep":
@@ -202,8 +226,17 @@ class CompressionPlan:
                         kwargs["bits"] = int(val)
                     elif key == "backend":
                         kwargs["backend"] = val
+                    elif key == "codec":
+                        from repro.codec import families as families_lib
+
+                        if val not in families_lib.available_families():
+                            fail(item, item_pos,
+                                 "unknown codec family; registered: "
+                                 f"{families_lib.available_families()}")
+                        kwargs["codec"] = val
                     else:
-                        raise ValueError(f"unknown plan setting {key!r} in {entry!r}")
+                        fail(item, item_pos, "unknown plan setting "
+                             "(keep/bits/backend/codec/off/on)")
             rules.append((start, stop, LayerPolicy(**kwargs)))
         if not rules:
             raise ValueError(f"empty plan spec {spec!r}")
@@ -224,25 +257,34 @@ class CompressionPlan:
                 settings.append(f"bits={p.bits}")
             if p.backend is not None:
                 settings.append(f"backend={p.backend}")
+            if p.codec != "dct":
+                settings.append(f"codec={p.codec}")
             if not p.enabled:
                 settings.append("off")
             parts.append(f"{rng}:{'+'.join(settings)}")
         return ",".join(parts)
 
     # --------------------------------------------------------- budget solver
-    def kv_bytes_per_token(self, cfg) -> float:
-        """Compressed KV bytes per token, summed over layers (K and V:
-        int8 packed corner + the f32 per-tile scale header).  Derives from
-        `codec.api.tile_bytes` — the one per-tile definition the codec's
-        storage_stats and the KV pool report also charge."""
-        from repro.codec.api import tile_bytes  # local: plan stays leaf-light
+    @staticmethod
+    def _layer_bytes_per_token(cfg, pol: LayerPolicy) -> float:
+        """Analytic compressed KV bytes/token of ONE layer under `pol` —
+        each policy's codec family charges its own worst-case tile bytes."""
+        from repro.codec import families as families_lib
 
         hd = cfg.resolved_head_dim
         assert hd % BLOCK == 0, hd
         nh = hd // BLOCK
-        return sum(
-            2 * cfg.n_kv_heads * nh * tile_bytes(pol.kv_keep) / BLOCK
-            for pol in self.policies(cfg.n_layers))
+        fam = families_lib.get_family(pol.codec)
+        return 2 * cfg.n_kv_heads * nh * fam.analytic_tile_bytes(pol.kv_keep) / BLOCK
+
+    def kv_bytes_per_token(self, cfg) -> float:
+        """Compressed KV bytes per token, summed over layers (K and V,
+        headers included).  Derives from each policy's codec family
+        `analytic_tile_bytes` — for the default dct family this is exactly
+        `codec.api.tile_bytes`, the definition the codec's storage_stats
+        and the KV pool report also charge."""
+        return sum(self._layer_bytes_per_token(cfg, pol)
+                   for pol in self.policies(cfg.n_layers))
 
     def page_bytes(self, cfg) -> int:
         """Bytes of one paged-pool page: one 8-token DCT block group across
@@ -263,15 +305,36 @@ class CompressionPlan:
     @classmethod
     def from_budget(cls, cfg, max_seq: int, budget_bytes: float,
                     batch: int = 1, keep_max: int = KEEP_MAX,
-                    keep_min: int = KEEP_MIN) -> "CompressionPlan":
-        """Gentlest per-layer keeps whose summed KV footprint fits the budget.
+                    keep_min: int = KEEP_MIN,
+                    curves=None) -> "CompressionPlan":
+        """Gentlest per-layer configuration whose summed KV footprint fits
+        the budget.
 
-        Greedy walk down a fixed chain of configurations: start every layer
-        at `keep_max` and repeatedly decrement the largest keep (deepest
-        layer first — aggressive-late, like `pyramid`).  Because the chain is
-        independent of the budget, a smaller budget stops strictly further
-        along it, so keeps are pointwise monotone in the budget.
+        Without `curves`: greedy walk down a fixed chain of keep vectors —
+        start every layer at `keep_max` and repeatedly decrement the largest
+        keep (deepest layer first — aggressive-late, like `pyramid`).
+
+        With `curves` (rows of ``{"codec", "keep", "ppl_delta"}`` as emitted
+        into `benchmarks/plan_sweep.py`'s ``codec_curves`` artifact): a
+        solver over (codec, keep) pairs.  The rows are reduced to their
+        Pareto frontier (measured perplexity delta vs bytes), every layer
+        starts at the best-quality point, and layers are walked down the
+        frontier — most-expensive layer first, deepest on ties — until the
+        budget fits.  A row may carry ``bytes_per_token`` (per-LAYER
+        measured bytes/token, as plan_sweep records from the decoded
+        cache); rows without it are charged their codec family's analytic
+        worst case.  With measured rows the solver allocates by what tiles
+        actually store — the ROADMAP's "allocate by measured, not
+        analytic, size" — which is what lets variable-length families
+        (bitplane) win frontier spots their analytic bound would lose.
+
+        Either way the chain of configurations is independent of the budget,
+        so a smaller budget stops strictly further along it and the solved
+        plan is pointwise monotone in the budget.
         """
+        if curves is not None:
+            return cls._from_budget_curves(cfg, max_seq, budget_bytes,
+                                           curves, batch=batch)
         keeps = [keep_max] * cfg.n_layers
 
         def fits(ks):
@@ -289,7 +352,86 @@ class CompressionPlan:
             keeps[idx] = k - 1
         return cls.from_keeps(keeps)
 
+    @classmethod
+    def _from_budget_curves(cls, cfg, max_seq: int, budget_bytes: float,
+                            curves, batch: int = 1) -> "CompressionPlan":
+        points = []
+        for row in curves:
+            pol = LayerPolicy(keep=int(row["keep"]), codec=str(row["codec"]))
+            bpt = float(row["bytes_per_token"]) if "bytes_per_token" in row \
+                else cls._layer_bytes_per_token(cfg, pol)
+            points.append((bpt, float(row["ppl_delta"]), pol))
+        if not points:
+            raise ValueError("from_budget: empty codec curves")
+        # Pareto frontier: walking bytes ascending, keep a point only if it
+        # improves on every cheaper point's perplexity.  The frontier is then
+        # bytes-ascending / quality-improving; reverse so index 0 is the
+        # best-quality (most expensive) configuration.
+        points.sort(key=lambda e: (e[0], e[1]))
+        frontier = []
+        best = float("inf")
+        for bpt, ppl, pol in points:
+            if ppl < best - 1e-12:
+                frontier.append((bpt, ppl, pol))
+                best = ppl
+        frontier.reverse()
+
+        levels = [0] * cfg.n_layers  # per-layer index into the frontier
+
+        def plan_of(lv):
+            return cls.from_policies(frontier[j][2] for j in lv)
+
+        # charge each layer the frontier row's OWN bytes/token (measured
+        # when the row carries it), plus the raw bf16 tail ring — identical
+        # to kv_cache_bytes when every row is analytic
+        tail = cfg.n_layers * 2 * BLOCK * cfg.n_kv_heads * \
+            cfg.resolved_head_dim * 2
+
+        def bytes_of(lv):
+            return batch * (sum(frontier[j][0] for j in lv) * max_seq + tail)
+
+        def fits(lv):
+            return bytes_of(lv) <= budget_bytes
+
+        while not fits(levels):
+            movable = [i for i in range(cfg.n_layers)
+                       if levels[i] < len(frontier) - 1]
+            if not movable:
+                raise ValueError(
+                    f"budget {budget_bytes:.0f} B infeasible: cheapest "
+                    f"frontier point everywhere needs "
+                    f"{bytes_of(levels):.0f} B")
+            bmax = max(frontier[levels[i]][0] for i in movable)
+            idx = max(i for i in movable if frontier[levels[i]][0] == bmax)
+            levels[idx] += 1
+        return plan_of(levels)
+
     # -------------------------------------------------------------- plumbing
+    @classmethod
+    def from_policies(cls, policies) -> "CompressionPlan":
+        """Explicit per-layer policy sequence -> plan (runs collapsed)."""
+        policies = tuple(policies)
+        assert policies, "empty policy list"
+        rules, s0 = [], 0
+        for i in range(1, len(policies)):
+            if policies[i] != policies[s0]:
+                rules.append((s0, i, policies[s0]))
+                s0 = i
+        rules.append((s0, None, policies[s0]))
+        return cls(rules=tuple(rules))
+
+    def with_codec(self, codec: str | None) -> "CompressionPlan":
+        """Set `codec` on EVERY policy (a global family override, unlike
+        `with_backend`'s fill-if-unset — 'dct' is a real default, not an
+        unset marker)."""
+        if codec is None:
+            return self
+        return CompressionPlan(
+            rules=tuple((s, e, replace(p, codec=codec))
+                        for s, e, p in self.rules),
+            default=replace(self.default, codec=codec),
+        )
+
     def with_backend(self, backend: str | None) -> "CompressionPlan":
         """Fill in `backend` on every policy that does not set its own."""
         if backend is None:
@@ -307,13 +449,14 @@ def raw_kv_bytes_per_token(cfg, dtype_bytes: int = 2) -> float:
     return cfg.n_layers * 2 * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
 
 
-def as_plan(value, *, keep: int | None = None,
-            backend: str | None = None) -> CompressionPlan:
+def as_plan(value, *, keep: int | None = None, backend: str | None = None,
+            codec: str | None = None) -> CompressionPlan:
     """Normalize any sanctioned plan spelling to a `CompressionPlan`.
 
     value: CompressionPlan (as-is) | spec string | int (uniform keep) |
     None (uniform `keep`, the legacy-scalar shim).  `backend` fills in
-    policies that don't pin their own backend.
+    policies that don't pin their own backend; `codec` (if given) overrides
+    the codec family on every policy.
     """
     if value is None:
         plan = CompressionPlan.uniform(4 if keep is None else keep)
@@ -325,4 +468,4 @@ def as_plan(value, *, keep: int | None = None,
         plan = CompressionPlan.uniform(value)
     else:
         raise TypeError(f"cannot interpret {value!r} as a CompressionPlan")
-    return plan.with_backend(backend)
+    return plan.with_backend(backend).with_codec(codec)

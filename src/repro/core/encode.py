@@ -103,6 +103,38 @@ def rle_codec_bits(x: np.ndarray, value_bits: int = 16, run_bits: int = 5) -> in
     return tokens * (run_bits + value_bits)
 
 
+def rle_codec_bits_tiles(x, value_bits: int = 16, run_bits: int = 5):
+    """`rle_codec_bits` per trailing-axis stream, jit-traceable.
+
+    `x` is (..., n); every trailing vector is its own RLE stream and the
+    result is the (...,) int32 bit count of each.  This is the SAME
+    zero-gap accounting as `rle_codec_bits` above (each non-zero token is
+    preceded by floor(gap / maxrun) saturated zero tokens; a trailing zero
+    run costs ceil(run / maxrun) tokens), expressed in jnp so the bitplane
+    codec family can store a measured per-block length scalar inside jit.
+    tests pin the two functions bitwise against each other — this is the
+    one traceable form of the reference, not a second accounting.
+    """
+    x = jnp.asarray(x)
+    n = x.shape[-1]
+    maxrun = (1 << run_bits) - 1
+    mask = x != 0
+    pos = jnp.arange(n, dtype=jnp.int32)
+    marked = jnp.where(mask, pos, -1)
+    # index of the previous non-zero at-or-before each position (-1 = none);
+    # shifted right one step it is the previous non-zero STRICTLY before.
+    prev_at = jax.lax.associative_scan(jnp.maximum, marked, axis=-1)
+    prev_before = jnp.concatenate(
+        [jnp.full(x.shape[:-1] + (1,), -1, jnp.int32), prev_at[..., :-1]],
+        axis=-1)
+    gaps = pos - prev_before - 1                       # zeros before position
+    saturated = jnp.where(mask, gaps // maxrun, 0)     # zero tokens per nnz
+    nnz = jnp.sum(mask, axis=-1)
+    tail = n - 1 - jnp.max(marked, axis=-1)            # trailing zero run
+    tokens = nnz + jnp.sum(saturated, axis=-1) + (-(-tail // maxrun))
+    return (tokens * (run_bits + value_bits)).astype(jnp.int32)
+
+
 def csr_codec_bits(x: np.ndarray, value_bits: int = 16) -> int:
     """CSR over 2-D planes: col index per nnz + row pointers (STICKER-style)."""
     x = np.asarray(x)

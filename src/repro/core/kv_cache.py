@@ -62,24 +62,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codec as codec_lib
+from repro.codec import families as families_lib
 from repro.codec import plan as plan_lib
-from repro.codec.api import tile_bytes
 from repro.parallel.sharding import (attn_hint, logical as shard_hint,
                                      table_slice_hint)
 
 BLOCK = 8
 
-_SEGMENT_FIELDS = ("packed_k", "scale_k", "packed_v", "scale_v",
-                   "tail_k", "tail_v")
+# raw per-slot tail ring planes — outside every codec family's plane tree
+TAIL_NAMES = families_lib.TAIL_NAMES
 
 
-def block_group_bytes(keep: int, n_kv_heads: int, head_dim: int) -> int:
-    """Bytes of one flushed 8-token block group for ONE layer, K and V
-    (int8 k x k corners + f32 scales) — `codec.api.tile_bytes` applied to
-    the cache geometry.  This is the page-size unit of the paged pool and
-    the per-block term of every analytic pool report."""
+def block_group_bytes(keep: int, n_kv_heads: int, head_dim: int,
+                      codec: str = "dct") -> int:
+    """Analytic bytes of one flushed 8-token block group for ONE layer, K
+    and V — the codec family's `analytic_tile_bytes` applied to the cache
+    geometry (for dct exactly `codec.api.tile_bytes`).  This is the
+    page-size unit of the paged pool and the per-block term of every
+    analytic pool report."""
     assert head_dim % BLOCK == 0, head_dim
-    return 2 * n_kv_heads * (head_dim // BLOCK) * tile_bytes(keep)
+    fam = families_lib.get_family(codec)
+    return 2 * n_kv_heads * (head_dim // BLOCK) * fam.analytic_tile_bytes(keep)
 
 
 def as_pos_vec(pos: jax.Array | int, batch: int) -> jax.Array:
@@ -126,64 +129,92 @@ def decompress_kv_blocks(packed: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
 class KVSegment:
     """Compressed store for one contiguous run of layers sharing a policy.
 
-    Shapes (GQA; Lseg = stop - start layers):
-      packed_k/v : (Lseg, B, S/8, Hkv, hd/8, k, k) int8
-      scale_k/v  : (Lseg, B, S/8, Hkv, hd/8)       f32
-      tail_k/v   : (Lseg, B, 8, Hkv, hd)           raw dtype
+    `planes` holds every storage array this segment's codec FAMILY declares,
+    materialized once for K and once for V as ``{name}_k`` / ``{name}_v``
+    (plus the family-independent raw tail ring ``tail_k`` / ``tail_v``).
+    Shapes (GQA; Lseg = stop - start layers; block_shape per
+    `families.PlaneSpec`):
 
-    Registered WITH key paths so `parallel.sharding.cache_specs` can dispatch
-    on each plane's field name straight off the cache pytree — one spec rule
-    set covers the dict form (dry-run) and the segment form (serve engine).
+      {name}_k/v : (Lseg, B, S/8, Hkv) + block_shape   e.g. dct packed ->
+                   (Lseg, B, S/8, Hkv, hd/8, k, k) int8, scale ->
+                   (Lseg, B, S/8, Hkv, hd/8) f32
+      tail_k/v   : (Lseg, B, 8, Hkv, hd) raw dtype
+
+    Registered WITH key paths so `parallel.sharding.cache_specs` can
+    dispatch on each plane's name straight off the cache pytree — one spec
+    rule set covers the dict form (dry-run) and the segment form (serve
+    engine).  Flatten order is sorted-by-name so segments of equal plan are
+    structurally equal pytrees.
     """
 
-    packed_k: jax.Array
-    scale_k: jax.Array
-    packed_v: jax.Array
-    scale_v: jax.Array
-    tail_k: jax.Array
-    tail_v: jax.Array
+    planes: dict[str, jax.Array]
     keep: int                  # static: this segment's kept corner size
     start: int                 # static: absolute first layer
     stop: int                  # static: absolute one-past-last layer
     backend: str | None = None  # static: codec backend (None = auto)
+    codec: str = "dct"          # static: codec family (plane tree owner)
+
+    def __post_init__(self):
+        # legacy positional-array construction died with _SEGMENT_FIELDS
+        assert isinstance(self.planes, dict), type(self.planes)
+
+    def _names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.planes))
 
     def tree_flatten(self):
-        return tuple(getattr(self, f) for f in _SEGMENT_FIELDS), \
-            (self.keep, self.start, self.stop, self.backend)
+        names = self._names()
+        return tuple(self.planes[n] for n in names), \
+            (names, self.keep, self.start, self.stop, self.backend,
+             self.codec)
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
-        return tuple((ga(f), getattr(self, f)) for f in _SEGMENT_FIELDS), \
-            (self.keep, self.start, self.stop, self.backend)
+        names = self._names()
+        return tuple((ga(n), self.planes[n]) for n in names), \
+            (names, self.keep, self.start, self.stop, self.backend,
+             self.codec)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        names, *rest = aux
+        return cls(dict(zip(names, children)), *rest)
+
+    # legacy single-plane views (the pre-family 4+2 field names)
+    packed_k = property(lambda self: self.planes["packed_k"])
+    scale_k = property(lambda self: self.planes["scale_k"])
+    packed_v = property(lambda self: self.planes["packed_v"])
+    scale_v = property(lambda self: self.planes["scale_v"])
+    tail_k = property(lambda self: self.planes["tail_k"])
+    tail_v = property(lambda self: self.planes["tail_v"])
+
+    @property
+    def family(self) -> families_lib.CodecFamily:
+        return families_lib.get_family(self.codec)
+
+    @property
+    def page_keys(self) -> tuple[str, ...]:
+        """Names of the block planes that live in the paged pool (every
+        plane the family declares; tails stay per slot)."""
+        return tuple(n for n in self._names() if n not in TAIL_NAMES)
 
     def as_tree(self) -> dict[str, jax.Array]:
         """The {packed_k, ..., tail_v} dict layer-sliceable consumers scan."""
-        return dict(packed_k=self.packed_k, scale_k=self.scale_k,
-                    packed_v=self.packed_v, scale_v=self.scale_v,
-                    tail_k=self.tail_k, tail_v=self.tail_v)
+        return dict(self.planes)
 
     def replace_arrays(self, tree: dict[str, jax.Array]) -> "KVSegment":
-        return KVSegment(tree["packed_k"], tree["scale_k"], tree["packed_v"],
-                         tree["scale_v"], tree["tail_k"], tree["tail_v"],
-                         self.keep, self.start, self.stop, self.backend)
+        assert sorted(tree) == list(self._names()), (sorted(tree), self._names())
+        return KVSegment(dict(tree), self.keep, self.start, self.stop,
+                         self.backend, self.codec)
 
     def nbytes(self) -> float:
-        """Device bytes held by this segment's planes.
-
-        Computed from `codec.api.tile_bytes` — the same per-tile definition
-        `TruncatedCompressed.nbytes_per_element`, `Codec.storage_stats` and
-        `CompressionPlan.kv_bytes_per_token` charge (int8 corner + the
-        4-byte f32-scale header, nothing else) — so the pool report cannot
-        drift from the codec accounting.  tests/test_plan.py asserts this
-        equals the literal sum of the array buffers.
+        """Device bytes held by this segment's planes — the literal sum of
+        the array buffers.  For the dct family this equals the analytic
+        `codec.api.tile_bytes` charge exactly (int8 corner + 4-byte f32
+        scale header, nothing else), so the pool report cannot drift from
+        the codec accounting; tests/test_plan.py pins that identity.
         """
-        ntiles = self.scale_k.size + self.scale_v.size  # one scale per tile
-        tail = (self.tail_k.size + self.tail_v.size) * self.tail_k.dtype.itemsize
-        return float(ntiles * tile_bytes(self.keep) + tail)
+        return float(sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                         for a in self.planes.values()))
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -212,11 +243,13 @@ class CompressedKVCache:
     @classmethod
     def from_arrays(cls, packed_k, scale_k, packed_v, scale_v, tail_k, tail_v,
                     keep: int, backend: str | None = None) -> "CompressedKVCache":
-        """Single-segment (uniform-plan) cache from bare (L, B, ...) planes —
-        the legacy constructor shape, for consumers that flatten the cache
-        into its planes and rebuild it (e.g. the dry-run sharding driver)."""
-        return cls((KVSegment(packed_k, scale_k, packed_v, scale_v,
-                              tail_k, tail_v, keep=keep, start=0,
+        """Single-segment (uniform-plan, dct) cache from bare (L, B, ...)
+        planes — the legacy constructor shape, for consumers that flatten
+        the cache into its planes and rebuild it (e.g. the dry-run sharding
+        driver)."""
+        planes = dict(packed_k=packed_k, scale_k=scale_k, packed_v=packed_v,
+                      scale_v=scale_v, tail_k=tail_k, tail_v=tail_v)
+        return cls((KVSegment(planes, keep=keep, start=0,
                               stop=packed_k.shape[0], backend=backend),))
 
     def _single(self) -> KVSegment:
@@ -244,16 +277,22 @@ class CompressedKVCache:
                      for _ in range(s.stop - s.start))
 
     @property
+    def codecs(self) -> tuple[str, ...]:
+        """Per-layer codec family names (the materialized plan)."""
+        return tuple(s.codec for s in self.segments
+                     for _ in range(s.stop - s.start))
+
+    @property
     def max_seq(self) -> int:
         return self.segments[0].packed_k.shape[2] * BLOCK
 
     def nbytes_per_token_per_layer(self) -> float:
-        """Mean compressed bytes per token per layer (both K and V)."""
+        """Mean analytic compressed bytes per token per layer (K and V)."""
         total = 0.0
         for s in self.segments:
             _, _, _, hkv, nhd, k, _ = s.packed_k.shape
             total += (s.stop - s.start) * \
-                block_group_bytes(k, hkv, nhd * BLOCK) / BLOCK
+                block_group_bytes(k, hkv, nhd * BLOCK, codec=s.codec) / BLOCK
         return total / self.n_layers
 
     def storage_stats(self, raw_dtype_bytes: int = 2) -> dict:
@@ -271,6 +310,24 @@ class CompressedKVCache:
         }
 
 
+def _segment_planes(pol, n_layers: int, prefix: tuple[int, ...], batch: int,
+                    hkv: int, hd: int, dtype) -> dict[str, jax.Array]:
+    """Zero planes for one segment from its family's declared plane tree.
+
+    `prefix` is the cache layout's per-plane leading shape AFTER the layer
+    axis and BEFORE the Hkv axis: (batch, S/8) dense, (n_pages,) paged.
+    """
+    fam = families_lib.get_family(pol.codec)
+    planes: dict[str, jax.Array] = {}
+    for spec in fam.plane_specs(pol.kv_keep, hd):
+        shape = (n_layers,) + prefix + (hkv,) + spec.block_shape
+        for sfx in ("_k", "_v"):
+            planes[spec.name + sfx] = jnp.zeros(shape, spec.dtype)
+    for name in TAIL_NAMES:
+        planes[name] = jnp.zeros((n_layers, batch, BLOCK, hkv, hd), dtype)
+    return planes
+
+
 def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
                           dtype=jnp.bfloat16,
                           plan=None) -> CompressedKVCache:
@@ -280,16 +337,14 @@ def init_compressed_cache(cfg, batch: int, max_seq: int, keep: int = 4,
     assert hd % BLOCK == 0, f"head_dim {hd} not 8-tileable"
     plan = plan_lib.as_plan(plan, keep=keep)
     hkv = cfg.n_kv_heads
-    ns, nh = max_seq // BLOCK, hd // BLOCK
+    ns = max_seq // BLOCK
     segments = []
     for start, stop, pol in plan.segments(cfg.n_layers):
-        l, k = stop - start, pol.kv_keep
-        mk = lambda: jnp.zeros((l, batch, ns, hkv, nh, k, k), jnp.int8)
-        sc = lambda: jnp.zeros((l, batch, ns, hkv, nh), jnp.float32)
-        tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
-        segments.append(KVSegment(mk(), sc(), mk(), sc(), tl(), tl(),
-                                  keep=k, start=start, stop=stop,
-                                  backend=pol.backend))
+        planes = _segment_planes(pol, stop - start, (batch, ns), batch,
+                                 hkv, hd, dtype)
+        segments.append(KVSegment(planes, keep=pol.kv_keep, start=start,
+                                  stop=stop, backend=pol.backend,
+                                  codec=pol.codec))
     return CompressedKVCache(tuple(segments))
 
 
@@ -351,12 +406,19 @@ class PagedKVCache:
         return tuple(s.keep for s in self.segments
                      for _ in range(s.stop - s.start))
 
+    @property
+    def codecs(self) -> tuple[str, ...]:
+        return tuple(s.codec for s in self.segments
+                     for _ in range(s.stop - s.start))
+
     def page_bytes(self) -> int:
-        """Bytes of one page across all layers (the allocation granule)."""
+        """Analytic bytes of one page across all layers (the allocation
+        granule) — each segment charged by its own codec family."""
         total = 0
         for s in self.segments:
             _, _, hkv, nhd, k, _ = s.packed_k.shape
-            total += (s.stop - s.start) * block_group_bytes(k, hkv, nhd * BLOCK)
+            total += (s.stop - s.start) * \
+                block_group_bytes(k, hkv, nhd * BLOCK, codec=s.codec)
         return total
 
 
@@ -376,18 +438,54 @@ def init_paged_cache(cfg, batch: int, max_seq: int, n_pages: int,
     assert hd % BLOCK == 0, f"head_dim {hd} not 8-tileable"
     plan = plan_lib.as_plan(plan, keep=keep)
     hkv = cfg.n_kv_heads
-    nh = hd // BLOCK
     segments = []
     for start, stop, pol in plan.segments(cfg.n_layers):
-        l, k = stop - start, pol.kv_keep
-        mk = lambda: jnp.zeros((l, n_pages, hkv, nh, k, k), jnp.int8)
-        sc = lambda: jnp.zeros((l, n_pages, hkv, nh), jnp.float32)
-        tl = lambda: jnp.zeros((l, batch, BLOCK, hkv, hd), dtype)
-        segments.append(KVSegment(mk(), sc(), mk(), sc(), tl(), tl(),
-                                  keep=k, start=start, stop=stop,
-                                  backend=pol.backend))
+        planes = _segment_planes(pol, stop - start, (n_pages,), batch,
+                                 hkv, hd, dtype)
+        segments.append(KVSegment(planes, keep=pol.kv_keep, start=start,
+                                  stop=stop, backend=pol.backend,
+                                  codec=pol.codec))
     table = jnp.zeros((batch, max_seq // BLOCK), jnp.int32)
     return PagedKVCache(tuple(segments), table)
+
+
+def measured_cache_bytes(cache) -> float:
+    """MEASURED (data-dependent) compressed bytes resident in the cache —
+    what the ROADMAP's "allocate pages by measured, not analytic, size"
+    allocates against, reported beside the analytic worst case.
+
+    Variable-length families (bitplane) carry a per-tile length plane
+    (``blen``, in bits; written tiles are always > 0) — their measured
+    bytes are the exact sum of stored stream bytes plus scale headers.
+    Fixed-size families charge their analytic tile bytes per LIVE tile,
+    where live is detected from nonzero carrier/scale content (an estimate:
+    a flushed tile whose block quantized to all-zeros with zero scale is
+    indistinguishable from an unwritten one).  Raw tails are charged at
+    their full buffer size.  Host-side accounting — syncs the planes it
+    inspects; call from stats paths, not the decode loop.
+    """
+    total = 0.0
+    for seg in cache.segments:
+        planes = seg.as_tree()
+        fam = seg.family
+        for name in TAIL_NAMES:
+            a = planes[name]
+            total += int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+        for sfx in ("_k", "_v"):
+            if "blen" + sfx in planes:
+                blen = np.asarray(planes["blen" + sfx])
+                live = blen > 0
+                header = families_lib.SCALE_HEADER_BYTES
+                total += float(np.sum(
+                    np.where(live, (blen + 7) // 8 + header, 0)))
+            else:
+                live = np.any(np.asarray(planes["packed" + sfx]) != 0,
+                              axis=(-1, -2))
+                if "scale" + sfx in planes:
+                    live = live | (np.asarray(planes["scale" + sfx]) != 0)
+                total += float(np.count_nonzero(live)) * \
+                    fam.analytic_tile_bytes(seg.keep)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -403,11 +501,13 @@ def update_layer(
     backend: str | None = None,
     *,
     flush_page: jax.Array | None = None,  # (B,) page ids (paged pool only)
+    codec: str = "dct",
 ) -> dict[str, jax.Array]:
     """Write each row's new token into its own tail slot; flush per row.
 
-    layer_cache keys: packed_k/scale_k/packed_v/scale_v (B, S/8, Hkv, hd/8, k, k)
-    / (B, S/8, Hkv, hd/8), tail_k/tail_v (B, 8, Hkv, hd).
+    layer_cache holds the codec family's block planes in cache layout —
+    ``{name}_k/v (B, S/8, Hkv) + block_shape`` (dct: packed_k/scale_k/
+    packed_v/scale_v) — plus tail_k/tail_v (B, 8, Hkv, hd).
 
     Every row carries its own position, so the tail write is a batched
     scatter at slot = pos % 8, and the block flush is a masked scatter at
@@ -417,14 +517,15 @@ def update_layer(
     flushes (7 of 8 steps in lock-step serving) — the per-row decision
     stays a masked scatter either way.
 
-    PAGED pool: pass `flush_page` and pool-shaped packed/scale planes
-    (P, Hkv, hd/8, k, k) / (P, Hkv, hd/8).  The flush then scatters row b's
-    block into page `flush_page[b]` instead of (b, pos//8); the engine
-    hands out page ids (its free list is the allocator) and sets
-    out-of-range ids (>= P) for rows that must not flush, which the
-    drop-mode scatter discards.  The caller owns the block-table update —
-    this function never sees the table.
+    PAGED pool: pass `flush_page` and pool-shaped block planes
+    ((P, Hkv) + block_shape).  The flush then scatters row b's block into
+    page `flush_page[b]` instead of (b, pos//8); the engine hands out page
+    ids (its free list is the allocator) and sets out-of-range ids (>= P)
+    for rows that must not flush, which the drop-mode scatter discards.
+    The caller owns the block-table update — this function never sees the
+    table.
     """
+    fam = families_lib.get_family(codec)
     b = k_new.shape[0]
     pos = as_pos_vec(pos, b)
     rows = jnp.arange(b)
@@ -443,69 +544,59 @@ def update_layer(
     tail_v = shard_hint(tail_v, "batch", None, "model", None)
 
     paged = flush_page is not None
+    block_names = tuple(sorted(n for n in layer_cache if n not in TAIL_NAMES))
+    blocks = {n: layer_cache[n] for n in block_names}
     ns = layer_cache["packed_k"].shape[1]  # dense: S/8 blocks; paged: Hkv
+
     flush_row = slot == BLOCK - 1
 
     def flush(args):
-        pk, sk, pv, sv, tk, tv = args
+        blocks, tk, tv = args
         # (B, 8, Hkv, hd) -> (B, Hkv, 8, hd) planes -> one block per row
         qk, sck = compress_kv_blocks(jnp.swapaxes(tk, 1, 2), keep, backend)
         qv, scv = compress_kv_blocks(jnp.swapaxes(tv, 1, 2), keep, backend)
-        # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, Hkv, hd/8, k, k)
-        qk = jnp.swapaxes(qk, 1, 2)[:, 0]
-        qv = jnp.swapaxes(qv, 1, 2)[:, 0]
-        sck = jnp.swapaxes(sck, 1, 2)[:, 0]
-        scv = jnp.swapaxes(scv, 1, 2)[:, 0]
+        # qk: (B, Hkv, 1, hd/8, k, k) -> cache layout (B, Hkv, hd/8, k, k);
+        # the family lays the quantized blocks out into its declared planes
+        upd = {}
+        for sfx, q, sc in (("_k", qk, sck), ("_v", qv, scv)):
+            q = jnp.swapaxes(q, 1, 2)[:, 0]
+            sc = jnp.swapaxes(sc, 1, 2)[:, 0]
+            for name, plane in fam.pack(q, sc, keep).items():
+                upd[name + sfx] = plane
         if paged:
             # guard against stray ids on non-flushing rows: force them out
             # of range so the drop-mode scatter discards them
-            page = jnp.where(flush_row, flush_page, pk.shape[0])
-            return (
-                pk.at[page].set(qk, mode="drop"),
-                sk.at[page].set(sck, mode="drop"),
-                pv.at[page].set(qv, mode="drop"),
-                sv.at[page].set(scv, mode="drop"),
-            )
+            page = jnp.where(flush_row, flush_page,
+                             blocks["packed_k"].shape[0])
+            return {n: blocks[n].at[page].set(
+                upd[n].astype(blocks[n].dtype), mode="drop")
+                for n in block_names}
         blk = jnp.where(flush_row, pos // BLOCK, ns)  # ns => dropped
-        return (
-            pk.at[rows, blk].set(qk, mode="drop"),
-            sk.at[rows, blk].set(sck, mode="drop"),
-            pv.at[rows, blk].set(qv, mode="drop"),
-            sv.at[rows, blk].set(scv, mode="drop"),
-        )
+        return {n: blocks[n].at[rows, blk].set(
+            upd[n].astype(blocks[n].dtype), mode="drop")
+            for n in block_names}
 
     def no_flush(args):
-        pk, sk, pv, sv, _, _ = args
-        return pk, sk, pv, sv
+        blocks, _, _ = args
+        return dict(blocks)
 
-    pk, sk, pv, sv = jax.lax.cond(
-        jnp.any(flush_row), flush, no_flush,
-        (
-            layer_cache["packed_k"], layer_cache["scale_k"],
-            layer_cache["packed_v"], layer_cache["scale_v"],
-            tail_k, tail_v,
-        ),
-    )
+    blocks = jax.lax.cond(jnp.any(flush_row), flush, no_flush,
+                          (blocks, tail_k, tail_v))
     if paged:
         # pool layout per cache_specs: pages ride the data axes (the batch
         # scatter above crosses banks by design — the page allocator does
         # not know about devices), heads on `model` when they divide it
-        pk = shard_hint(pk, "batch", "model", None, None, None)
-        pv = shard_hint(pv, "batch", "model", None, None, None)
-        sk = shard_hint(sk, "batch", "model", None)
-        sv = shard_hint(sv, "batch", "model", None)
+        blocks = {n: shard_hint(a, "batch", "model", *[None] * (a.ndim - 2))
+                  for n, a in blocks.items()}
     else:
-        # packed/scale layout must MATCH cache_specs: heads on `model` when
+        # block-plane layout must MATCH cache_specs: heads on `model` when
         # they divide it, else the S/8 block axis (attn_hint implements that
         # fallback) — a plain heads-only hint would conflict with the pool
         # specs for non-dividing head counts and force a full-store reshard
         # per step
-        pk = attn_hint(pk, s_axis=1, h_axis=2)
-        pv = attn_hint(pv, s_axis=1, h_axis=2)
-        sk = attn_hint(sk, s_axis=1, h_axis=2)
-        sv = attn_hint(sv, s_axis=1, h_axis=2)
-    return dict(packed_k=pk, scale_k=sk, packed_v=pv, scale_v=sv,
-                tail_k=tail_k, tail_v=tail_v)
+        blocks = {n: attn_hint(a, s_axis=1, h_axis=2)
+                  for n, a in blocks.items()}
+    return dict(blocks, tail_k=tail_k, tail_v=tail_v)
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +621,7 @@ def attend_compressed(
     scale: float | None = None,
     backend: str | None = None,
     block_table: jax.Array | None = None,  # (B, S/8) page ids (paged pool)
+    codec: str = "dct",
 ) -> jax.Array:
     """Online-softmax decode attention where K/V history is decompressed per
     chunk INSIDE the scan — compressed bytes are what stream from HBM.
@@ -538,12 +630,16 @@ def attend_compressed(
     row's flushed watermark, plus its raw tail (positions pos-pos%8 .. pos)
     merged with the same running-max algebra.
 
-    With `block_table`, packed/scale planes are the shared PAGE POOL
-    ((P, Hkv, hd/8, k, k) / (P, Hkv, hd/8)) and each chunk gathers its
-    blocks through the table first.  Chunk boundaries and every float op
-    after the gather are identical to the dense layout, so greedy decode
-    over a paged pool is bitwise the dense result (tests pin this).
+    The codec family unpacks its declared planes back to quantized blocks
+    per chunk (for dct that unpack is the identity, so the op stream is
+    bit-for-bit the pre-family path).  With `block_table`, the block planes
+    are the shared PAGE POOL ((P, Hkv) + block_shape) and each chunk
+    gathers its blocks through the table first.  Chunk boundaries and every
+    float op after the gather are identical to the dense layout, so greedy
+    decode over a paged pool is bitwise the dense result (tests pin this).
     """
+    fam = families_lib.get_family(codec)
+    bases = tuple(sorted({n[:-2] for n in layer_cache if n not in TAIL_NAMES}))
     b, sq, h, hd = q.shape
     pos = as_pos_vec(pos, b)
     pk = layer_cache["packed_k"]
@@ -575,17 +671,17 @@ def attend_compressed(
             # Unmapped entries point at page 0 — valid, and masked below.
             pages = jax.lax.dynamic_slice_in_dim(block_table, start, bpc, 1)
             sl = lambda a: a[pages]                       # (B, bpc, Hkv, ...)
-        # planes per (B, Hkv): (B, nb, Hkv, ...) -> (B, Hkv, nb, ...)
-        kc = decompress_kv_blocks(
-            jnp.swapaxes(sl(layer_cache["packed_k"]), 1, 2),
-            jnp.swapaxes(sl(layer_cache["scale_k"]), 1, 2), jnp.float32,
-            backend,
-        )                                                 # (B, Hkv, kv_block, hd)
-        vc = decompress_kv_blocks(
-            jnp.swapaxes(sl(layer_cache["packed_v"]), 1, 2),
-            jnp.swapaxes(sl(layer_cache["scale_v"]), 1, 2), jnp.float32,
-            backend,
-        )
+
+        def chunk_planes(sfx):
+            # planes per (B, Hkv): (B, nb, Hkv, ...) -> (B, Hkv, nb, ...)
+            return {base: jnp.swapaxes(sl(layer_cache[base + sfx]), 1, 2)
+                    for base in bases}
+
+        kq, ksc = fam.unpack(chunk_planes("_k"), k)
+        vq, vsc = fam.unpack(chunk_planes("_v"), k)
+        kc = decompress_kv_blocks(kq, ksc, jnp.float32, backend)
+        vc = decompress_kv_blocks(vq, vsc, jnp.float32, backend)
+        # kc/vc: (B, Hkv, kv_block, hd)
         kc = attn_hint(kc, s_axis=2, h_axis=1)  # heads else kv_block on model
         vc = attn_hint(vc, s_axis=2, h_axis=1)
         kr = _repeat_heads(kc, n_rep)                     # (B, H, kv_block, hd)
@@ -657,6 +753,7 @@ def attend_auto(
     backend: str | None = None,
     block_table: jax.Array | None = None,  # (B, nblocks) page ids (paged)
     pages_per_tile: int = 8,
+    codec: str = "dct",
 ) -> jax.Array:
     """Backend-dispatched decode attention over the compressed store.
 
@@ -668,16 +765,22 @@ def attend_auto(
     `block_table` when given one — possibly a `table_view` bucket slice —
     (the kernel reads the table on the scalar-prefetch path beside `pos`;
     `pages_per_tile` is the kernel's G-page tile width).
+
+    Only the dct family's plane layout matches what the fused kernel reads
+    (`CodecFamily.supports_fused_attend`); other families always decode
+    through the reference scan, whatever the backend says.
     """
     pos = as_pos_vec(pos, q.shape[0])
-    if codec_lib.resolve_backend_name(backend) == "pallas":
+    fused_ok = families_lib.get_family(codec).supports_fused_attend
+    if fused_ok and codec_lib.resolve_backend_name(backend) == "pallas":
         from repro.kernels.fused_attend import ops as fa_ops
 
         return fa_ops.attend_with_tail(q, layer_cache, pos, tile_s=kv_block,
                                        block_table=block_table,
                                        pages_per_tile=pages_per_tile)
     return attend_compressed(q, layer_cache, pos, keep, kv_block=kv_block,
-                             backend=backend, block_table=block_table)
+                             backend=backend, block_table=block_table,
+                             codec=codec)
 
 
 # ---------------------------------------------------------------------------
@@ -690,6 +793,7 @@ def prefill_compress(
     keep: int,
     pos: jax.Array | None = None,  # (B,) per-row prompt lengths; None => S
     backend: str | None = None,
+    codec: str = "dct",
 ) -> dict[str, jax.Array]:
     """Compress a full prompt's K/V for one layer into cache layout.
 
@@ -708,6 +812,7 @@ def prefill_compress(
     post-prefill token is sampled from the prefill logits, never attended
     out of this cache.
     """
+    fam = families_lib.get_family(codec)
     b, s = k.shape[:2]
     pos = as_pos_vec(s if pos is None else pos, b)
     kq, ks = compress_kv_blocks(jnp.swapaxes(k, 1, 2), keep, backend)  # (B,Hkv,S/8,hd/8,k,k)
@@ -718,11 +823,11 @@ def prefill_compress(
     idx = jnp.minimum(idx, s - 1)[:, :, None, None]
     tail_k = jnp.take_along_axis(k, idx, axis=1)               # (B, 8, Hkv, hd)
     tail_v = jnp.take_along_axis(v, idx, axis=1)
-    return dict(
-        packed_k=jnp.swapaxes(kq, 1, 2), scale_k=jnp.swapaxes(ks, 1, 2),
-        packed_v=jnp.swapaxes(vq, 1, 2), scale_v=jnp.swapaxes(vs, 1, 2),
-        tail_k=tail_k, tail_v=tail_v,
-    )
+    out = dict(tail_k=tail_k, tail_v=tail_v)
+    for sfx, q, sc in (("_k", kq, ks), ("_v", vq, vs)):
+        for name, plane in fam.pack(q, sc, keep).items():
+            out[name + sfx] = jnp.swapaxes(plane, 1, 2)  # -> (B, S/8, Hkv, ...)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -762,10 +867,10 @@ def paged_write_slot(cache: PagedKVCache, slot_update, slot: jax.Array,
     for seg, upd in zip(cache.segments, slot_update):
         planes = seg.as_tree()
         new = {}
-        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+        for key in seg.page_keys:
             new[key] = planes[key].at[:, page_ids].set(
                 upd[key][:, 0].astype(planes[key].dtype), mode="drop")
-        for key in ("tail_k", "tail_v"):
+        for key in TAIL_NAMES:
             new[key] = jax.lax.dynamic_update_slice_in_dim(
                 planes[key], upd[key].astype(planes[key].dtype), slot, axis=1)
         segments.append(seg.replace_arrays(new))
@@ -792,12 +897,12 @@ def paged_write_rows(cache: PagedKVCache, rows_update, slots: jax.Array,
     for seg, upd in zip(cache.segments, rows_update):
         planes = seg.as_tree()
         new = {}
-        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+        for key in seg.page_keys:
             # planes[key]: (Lseg, P, ...); page_ids (R, nb) gathers to
             # (Lseg, R, nb, ...) — exactly upd[key]'s shape
             new[key] = planes[key].at[:, page_ids].set(
                 upd[key].astype(planes[key].dtype), mode="drop")
-        for key in ("tail_k", "tail_v"):
+        for key in TAIL_NAMES:
             new[key] = planes[key].at[:, slots].set(
                 upd[key].astype(planes[key].dtype), mode="drop")
         segments.append(seg.replace_arrays(new))
@@ -830,9 +935,9 @@ def paged_gather_slot(cache: PagedKVCache, slot: jax.Array,
         planes = seg.as_tree()
         ids = jnp.minimum(page_ids, planes["packed_k"].shape[1] - 1)
         upd = {}
-        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+        for key in seg.page_keys:
             upd[key] = planes[key][:, ids][:, None]  # (Lseg, 1, nb, ...)
-        for key in ("tail_k", "tail_v"):
+        for key in TAIL_NAMES:
             upd[key] = jax.lax.dynamic_slice_in_dim(planes[key], slot, 1,
                                                     axis=1)
         out.append(upd)
@@ -854,7 +959,7 @@ def paged_rows_match(cache: PagedKVCache, rows_update, page_ids: jax.Array):
     for seg, upd in zip(cache.segments, rows_update):
         planes = seg.as_tree()
         ids = jnp.minimum(page_ids, planes["packed_k"].shape[1] - 1)
-        for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
+        for key in seg.page_keys:
             got = planes[key][:, ids]  # (Lseg, R, nb, ...)
             want = upd[key].astype(planes[key].dtype)
             eq = got == want
@@ -876,7 +981,7 @@ def paged_reset_slot(cache: PagedKVCache, slot: jax.Array) -> PagedKVCache:
     for seg in cache.segments:
         planes = seg.as_tree()
         new = dict(planes)
-        for key in ("tail_k", "tail_v"):
+        for key in TAIL_NAMES:
             new[key] = planes[key].at[:, slot].set(
                 jnp.zeros_like(planes[key][:, 0]))
         segments.append(seg.replace_arrays(new))

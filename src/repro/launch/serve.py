@@ -60,6 +60,11 @@ def main(argv=None):
     ap.add_argument("--kv-budget-mb", type=float, default=None,
                     help="solve the plan from a KV byte budget instead "
                          "(CompressionPlan.from_budget; overrides --kv-plan)")
+    ap.add_argument("--kv-codec", default=None,
+                    help="codec family for every layer (dct, bitplane, asc); "
+                         "overrides any codec= tokens in --kv-plan. Mixed "
+                         "families go in the spec: '0-3:keep=6,"
+                         "4-:keep=4+codec=bitplane'")
     ap.add_argument("--kv-pool-pages", type=int, default=None,
                     help="paged KV pool: shared page count (one page = one "
                          "8-token block group across all layers); decouples "
@@ -144,8 +149,11 @@ def main(argv=None):
     if args.kv_budget_mb is not None:
         plan = plan_lib.CompressionPlan.from_budget(
             cfg, args.max_seq, args.kv_budget_mb * 1e6, batch=args.batch)
+        if args.kv_codec is not None:
+            plan = plan.with_codec(args.kv_codec)
     else:
-        plan = plan_lib.as_plan(args.kv_plan, keep=args.kv_keep)
+        plan = plan_lib.as_plan(args.kv_plan, keep=args.kv_keep,
+                                codec=args.kv_codec)
     buckets = tuple(int(b) for b in args.prefill_buckets.split(",")) \
         if args.prefill_buckets else None
     if args.decode_buckets == "off":

@@ -73,6 +73,9 @@ def main(argv=None):
                          "--compress-keep; see repro.codec.plan)")
     ap.add_argument("--compress-keep", "--compress_keep", type=int, default=4,
                     help="legacy uniform keep (shim for --compress-plan)")
+    ap.add_argument("--compress-codec", default=None,
+                    help="codec family for every layer (dct, bitplane, asc); "
+                         "overrides codec= tokens in --compress-plan")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -97,6 +100,7 @@ def main(argv=None):
         remat=args.remat,
         plan=args.compress_plan,           # None => uniform(compress_keep)
         compress_keep=args.compress_keep,
+        codec=args.compress_codec,
         grad_compress=args.grad_compress,
         optimizer=AdamWConfig(lr=args.lr, warmup_steps=20,
                               total_steps=args.steps),

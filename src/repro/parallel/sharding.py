@@ -282,6 +282,15 @@ def attn_hint(x: jax.Array, *, s_axis: int = 1, h_axis: int = 2) -> jax.Array:
     return logical(x, *entries)
 
 
+def _plane_block_ndims() -> dict:
+    """Block rank per codec-family plane base name (lazy: parallel must not
+    import codec at module scope — codec.api pulls jax program-building
+    machinery this leaf module stays independent of)."""
+    from repro.codec import families
+
+    return families.plane_block_ndims()
+
+
 def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
     """PartitionSpec pytree for a decode cache (raw, latent, recurrent, or
     DCT-compressed). Dispatch on leaf key + rank.
@@ -309,23 +318,24 @@ def cache_specs(cache_shapes: Any, cfg, mesh: Mesh):
             return kv_cache_spec(axes, cfg.n_kv_heads, msize, stacked=True)
         if name in ("c_kv", "k_rope"):              # (L, B, S, r)
             return latent_cache_spec(axes, stacked=True)
-        if name in ("packed_k", "packed_v"):
-            h = "model" if head_axis_ok(cfg.n_kv_heads) else None
-            if nd == 6:                             # paged pool (L, P, Hkv, hd/8, k, k)
-                return P(None, dp, h, None, None, None)
-            return P(None, dp, None if h else ("model" if has_model else None),
-                     h, None, None, None)          # dense (L, B, S/8, Hkv, hd/8, k, k)
-        if name in ("scale_k", "scale_v"):
-            h = "model" if head_axis_ok(cfg.n_kv_heads) else None
-            if nd == 4:                             # paged pool (L, P, Hkv, hd/8)
-                return P(None, dp, h, None)
-            return P(None, dp, None if h else ("model" if has_model else None),
-                     h, None)                      # dense (L, B, S/8, Hkv, hd/8)
-        if name == "block_table":                   # (B, S/8) page ids
-            return P(dp, None)
         if name in ("tail_k", "tail_v"):            # (L, B, 8, Hkv, hd)
             h = "model" if head_axis_ok(cfg.n_kv_heads) else None
             return P(None, dp, None, h, None)
+        base = name[:-2] if name.endswith(("_k", "_v")) else None
+        block_nd = _plane_block_ndims().get(base)
+        if block_nd is not None:
+            # codec-family block plane (families.plane_block_ndims declares
+            # the per-block rank n; dct packed n=3, scale n=1, ...):
+            #   paged pool : (L, P, Hkv)      + block_shape  -> rank 3 + n
+            #   dense      : (L, B, S/8, Hkv) + block_shape  -> rank 4 + n
+            h = "model" if head_axis_ok(cfg.n_kv_heads) else None
+            if nd == 3 + block_nd:                  # paged pool
+                return P(None, dp, h, *([None] * block_nd))
+            assert nd == 4 + block_nd, (name, nd, block_nd)
+            return P(None, dp, None if h else ("model" if has_model else None),
+                     h, *([None] * block_nd))      # dense
+        if name == "block_table":                   # (B, S/8) page ids
+            return P(dp, None)
         if name == "ssm":                           # (G, A, B, H, P, N)
             nh = leaf.shape[3]
             h = "model" if (has_model and nh % msize == 0 and nh >= msize) else None

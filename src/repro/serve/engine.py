@@ -156,7 +156,7 @@ def decode_step_compressed(
     hd = cfg.resolved_head_dim
     runs = _param_runs(cfg, params)
 
-    def make_layer_step(keep, backend):
+    def make_layer_step(keep, backend, codec):
         def layer_step(h, inp):
             p, lc = inp["p"], inp["cache"]
             hn = norm(p["ln1"], h)
@@ -166,10 +166,10 @@ def decode_step_compressed(
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_new, v_new = L.gqa_project_kv(p["attn"], hn, positions, cfg)
             lc2 = kvc.update_layer(lc, k_new, v_new, pos, keep, backend=backend,
-                                   flush_page=fp)
+                                   flush_page=fp, codec=codec)
             attn = kvc.attend_auto(q, lc2, pos, keep, kv_block=kv_block,
                                    backend=backend, block_table=att_table,
-                                   pages_per_tile=pages_per_tile)
+                                   pages_per_tile=pages_per_tile, codec=codec)
             attn = sh.attn_hint(attn)
             h = h + L.dense(p["attn"]["wo"], attn.reshape(b, s, cfg.n_heads * hd))
             if "moe" in p:
@@ -183,7 +183,8 @@ def decode_step_compressed(
     new_segments = []
     for seg in cache.segments:
         layer_step = make_layer_step(
-            seg.keep, seg.backend if seg.backend is not None else codec_backend)
+            seg.keep, seg.backend if seg.backend is not None else codec_backend,
+            seg.codec)
         seg_tree = seg.as_tree()
         parts = []
         for stack, ps, pe in runs:
@@ -241,18 +242,21 @@ def prefill_compressed(
         kseg = pol.kv_keep
         comp = jax.vmap(
             lambda k, v: kvc.prefill_compress(k, v, kseg, pos=lengths,
-                                              backend=pol.backend)
+                                              backend=pol.backend,
+                                              codec=pol.codec)
         )(raw["k"][start:stop, :, :nb_used * kvc.BLOCK],
           raw["v"][start:stop, :, :nb_used * kvc.BLOCK])  # vmap over layers
         if nb_used < nb_total:  # zero-fill the unwritten block range (axis 2)
             padb = lambda a: jnp.pad(
                 a, ((0, 0), (0, 0), (0, nb_total - nb_used)) + ((0, 0),) * (a.ndim - 3))
-            for key in ("packed_k", "scale_k", "packed_v", "scale_v"):
-                comp[key] = padb(comp[key])
+            for key in comp:
+                if key not in kvc.TAIL_NAMES:
+                    comp[key] = padb(comp[key])
+        planes = {key: comp[key].astype(dtype) if key in kvc.TAIL_NAMES
+                  else comp[key] for key in comp}
         segments.append(kvc.KVSegment(
-            comp["packed_k"], comp["scale_k"], comp["packed_v"], comp["scale_v"],
-            comp["tail_k"].astype(dtype), comp["tail_v"].astype(dtype),
-            keep=kseg, start=start, stop=stop, backend=pol.backend,
+            planes, keep=kseg, start=start, stop=stop, backend=pol.backend,
+            codec=pol.codec,
         ))
     return logits, kvc.CompressedKVCache(tuple(segments))
 
@@ -288,7 +292,8 @@ def prefill_compressed_paged(
         kseg = pol.kv_keep
         comp = jax.vmap(
             lambda k, v: kvc.prefill_compress(k, v, kseg, pos=lengths,
-                                              backend=pol.backend)
+                                              backend=pol.backend,
+                                              codec=pol.codec)
         )(raw["k"][start:stop], raw["v"][start:stop])  # vmap over layers
         comp["tail_k"] = comp["tail_k"].astype(dtype)
         comp["tail_v"] = comp["tail_v"].astype(dtype)
@@ -960,6 +965,11 @@ class Engine:
         out = {"kv_pool_bytes": int(total),
                "kv_bytes_per_device": per_device,
                "slots_per_gb": self.batch / max(total / 1e9, 1e-12)}
+        if "measured_kv_bytes" in self.stats:
+            # recorded by _run_continuous after its queue drains: the
+            # data-dependent footprint per the codec families' measured
+            # per-tile accounting, vs the analytic pool above
+            out["measured_kv_bytes"] = float(self.stats["measured_kv_bytes"])
         if self.paged:
             if self._worker is not None:
                 # settle in-flight retirements/spills so the counts (and
@@ -1709,6 +1719,14 @@ class Engine:
                 if len(pending) > depth or (pending and not live):
                     fut, plive = pending.popleft()
                     cache = self._process(fut, plive, cache)
+            # queue drained: record the DATA-DEPENDENT pool footprint next to
+            # the analytic one (kv_pool_stats reports both) — variable-length
+            # codec families (bitplane) are the reason the two differ.  Raw
+            # caches (kv_compress=False) are a plain dict with nothing to
+            # measure.
+            if hasattr(cache, "segments"):
+                self.stats["measured_kv_bytes"] = \
+                    kvc.measured_cache_bytes(cache)
         finally:
             worker, self._worker = self._worker, None
             worker.close()

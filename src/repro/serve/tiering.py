@@ -49,9 +49,20 @@ import numpy as np
 
 BLOCK = 8  # tokens per page (the DCT seq-block)
 
-# the packed/scale planes a page carries; tails are per-slot and never paged
+# The dct family's page planes — kept as a module constant for callers/tests
+# that reason about the default family. TierManager itself derives each
+# segment's plane set from the segment (codec families differ: bitplane pages
+# also carry bpmask/blen planes), so mixed-codec plans tier correctly.
 PAGE_KEYS = ("packed_k", "scale_k", "packed_v", "scale_v")
 TAIL_KEYS = ("tail_k", "tail_v")
+
+
+def _segment_page_keys(seg) -> tuple[str, ...]:
+    """Pageable plane names for one cache segment (everything but tails)."""
+    keys = getattr(seg, "page_keys", None)
+    if keys is not None:
+        return tuple(keys)
+    return PAGE_KEYS
 
 
 # ---------------------------------------------------------------------------
@@ -151,13 +162,18 @@ class TierManager:
         self.host_pages = int(host_pages)
         self._free = list(range(self.host_pages))
         self._store: list[dict[str, np.ndarray]] = []
+        self._page_keys: list[tuple[str, ...]] = []
         for seg in cache_shapes.segments:
+            keys = _segment_page_keys(seg)
+            plane_map = getattr(seg, "planes", None)
             planes = {}
-            for key in PAGE_KEYS:
-                ref = getattr(seg, key)
+            for key in keys:
+                ref = plane_map[key] if plane_map is not None \
+                    else getattr(seg, key)
                 shape = (ref.shape[0], self.host_pages) + tuple(ref.shape[2:])
                 planes[key] = np.zeros(shape, dtype=np.dtype(ref.dtype))
             self._store.append(planes)
+            self._page_keys.append(keys)
 
     @property
     def free_pages(self) -> int:
@@ -189,8 +205,8 @@ class TierManager:
         thread; the engine's `worker.flush()` before any read_back is the
         completion barrier.
         """
-        for planes, upd in zip(self._store, update):
-            for key in PAGE_KEYS:
+        for planes, keys, upd in zip(self._store, self._page_keys, update):
+            for key in keys:
                 src = np.asarray(upd[key])  # (Lseg, 1, nbkt, ...)
                 for i, hid in enumerate(host_ids):
                     planes[key][:, hid] = src[:, 0, i]
@@ -205,9 +221,9 @@ class TierManager:
         the caller's (they live in the parked record, not the page pool).
         """
         out = []
-        for planes in self._store:
+        for planes, keys in zip(self._store, self._page_keys):
             upd = {}
-            for key in PAGE_KEYS:
+            for key in keys:
                 ref = planes[key]
                 buf = np.zeros((ref.shape[0], 1, nbkt) + ref.shape[2:],
                                dtype=ref.dtype)

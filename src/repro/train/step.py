@@ -44,6 +44,8 @@ class TrainConfig:
     compress_keep: int = 4         # legacy scalar shim => uniform plan
     codec_backend: Any = None      # legacy backend shim => plan backend
                                    # (None = auto per repro.codec.dispatch)
+    codec: Any = None              # codec family override for every layer
+                                   # (None = keep the plan's, default dct)
     grad_compress: bool = False    # cross-pod DCT gradient exchange
     grad_compress_keep: int = 5
     grad_reduce_dtype: Any = jnp.bfloat16  # wire dtype of per-microbatch
@@ -119,7 +121,7 @@ def make_train_step(api: ModelAPI, mesh: Mesh, tc: TrainConfig):
     # one plan object from config to kernel; the scalar compress_keep /
     # codec_backend fields are uniform-plan shims
     plan = plan_lib.as_plan(tc.plan, keep=tc.compress_keep,
-                            backend=tc.codec_backend) \
+                            backend=tc.codec_backend, codec=tc.codec) \
         if tc.remat == "compressed" else None
 
     def loss_fn(params, mb):

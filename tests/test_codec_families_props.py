@@ -1,0 +1,73 @@
+"""Property tests for the codec-family contract (hypothesis).
+
+Three invariants hold for EVERY registered family on arbitrary quantized
+tiles, not just the fixtures the unit tests pick:
+
+  * pack -> unpack reproduces the int8 coefficient blocks bitwise;
+  * analytic_tile_bytes upper-bounds measured_tile_bits (the plan/pool can
+    budget analytically and never under-allocate what a tile stored);
+  * the bitplane family's stored per-tile length equals the numpy
+    `core.encode.rle_codec_bits` reference exactly (one RLE accounting).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; see requirements-dev.txt
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.codec import families as families_lib
+from repro.core import encode as encode_lib
+
+FAMILIES = ["dct", "bitplane", "asc"]
+
+
+@st.composite
+def quantized_tiles(draw):
+    """(q int8 (n, nh, k, k), scale f32 (n, nh), keep) with adversarial zero
+    structure: dense, empty, and sparse tiles all appear."""
+    keep = draw(st.integers(1, 8))
+    n = draw(st.integers(1, 4))
+    nh = draw(st.integers(1, 2))
+    zero_frac = draw(st.sampled_from([0.0, 0.3, 0.8, 1.0]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-127, 128, (n, nh, keep, keep)).astype(np.int8)
+    q = np.where(rng.random(q.shape) < zero_frac, 0, q)
+    scale = (rng.random((n, nh)).astype(np.float32) * 4.0).astype(np.float32)
+    scale = np.where(np.any(q != 0, axis=(-1, -2)), scale, 0.0)
+    return jnp.asarray(q), jnp.asarray(scale), keep
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+@settings(max_examples=25, deadline=None)
+@given(data=quantized_tiles())
+def test_roundtrip_exact(name, data):
+    q, scale, keep = data
+    fam = families_lib.get_family(name)
+    q2, _ = fam.unpack(fam.pack(q, scale, keep), keep)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+@settings(max_examples=25, deadline=None)
+@given(data=quantized_tiles())
+def test_analytic_upper_bounds_measured(name, data):
+    q, _, keep = data
+    fam = families_lib.get_family(name)
+    bits = np.asarray(fam.measured_tile_bits(q))
+    assert (bits <= 8 * fam.analytic_tile_bytes(keep)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=quantized_tiles())
+def test_bitplane_blen_is_the_rle_reference(data):
+    q, scale, keep = data
+    fam = families_lib.get_family("bitplane")
+    blen = np.asarray(fam.pack(q, scale, keep)["blen"])
+    qn = np.asarray(q)
+    for idx in np.ndindex(qn.shape[:-2]):
+        want = encode_lib.rle_codec_bits(qn[idx].reshape(-1),
+                                         fam.VALUE_BITS, fam.RUN_BITS)
+        assert int(blen[idx]) == want
